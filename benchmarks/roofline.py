@@ -1,0 +1,99 @@
+"""Roofline aggregation over the dry-run campaign results.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
+emits the §Roofline table: three terms per (arch x shape x mesh), dominant
+bottleneck, MODEL_FLOPS ratio, and a one-line "what would move the dominant
+term" note per family of bottleneck.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+NOTES = {
+    ("collective",): "overlap/reshard: reduce-scatter grads, bf16 "
+                     "collectives, fewer re-gathers of seq-sharded hidden",
+    ("memory",): "fuse/keep in VMEM: flash-attention kernel for score "
+                 "traffic, bf16 intermediates, chunk-parallel recurrences",
+    ("compute",): "already MXU-bound: raise arithmetic intensity via "
+                  "larger per-step tiles or quantization",
+}
+
+
+def load(variant: str = "v0_baseline", mesh: str | None = "pod16x16"):
+    recs = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{variant}.json"))):
+        r = json.load(open(f))
+        if mesh and r.get("mesh") != mesh and r.get("status") == "ok":
+            continue
+        if mesh and r.get("status") != "ok":
+            if mesh not in r.get("cell", ""):
+                continue
+        recs.append(r)
+    return recs
+
+
+def table(variant: str = "v0_baseline", mesh: str = "pod16x16") -> str:
+    recs = load(variant, mesh)
+    lines = [
+        f"Roofline table — mesh={mesh}, variant={variant} "
+        "(terms in ms on TPU v5e: 197 TF/s bf16, 819 GB/s HBM, "
+        "~50 GB/s ICI; per-chip quantities)",
+        f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+        f"{'collect':>9s} {'dominant':>10s} {'rooflineF':>9s} "
+        f"{'model/hlo':>9s} {'fitsHBM':>7s}"]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"{r['cell'].split('__')[0]:22s} "
+                         f"{r['cell'].split('__')[1]:12s} "
+                         f"{'— skipped: ' + r['reason'][:64]}")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"{r['cell']}: ERROR")
+            continue
+        rr = r["roofline"]
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} "
+            f"{rr['compute_s']*1e3:9.2f} {rr['memory_s']*1e3:9.2f} "
+            f"{rr['collective_s']*1e3:9.2f} {rr['dominant']:>10s} "
+            f"{rr['roofline_fraction']:9.4f} "
+            f"{r['model_flops_ratio']:9.3f} "
+            f"{str(r['fits_hbm']):>7s}")
+    doms = {}
+    for r in recs:
+        if r["status"] == "ok":
+            doms.setdefault(r["roofline"]["dominant"], []).append(r["arch"])
+    lines.append("")
+    for d, archs in sorted(doms.items()):
+        lines.append(f"bottleneck={d} ({len(archs)} cells): "
+                     f"{NOTES[(d,)]}")
+    return "\n".join(lines)
+
+
+def compare_variants(cell_prefix: str, variants: list[str]) -> str:
+    """Before/after table for §Perf hillclimbs."""
+    lines = [f"{'variant':28s} {'compute_ms':>10s} {'memory_ms':>10s} "
+             f"{'coll_ms':>10s} {'bound_ms':>10s} {'rooflineF':>9s}"]
+    for v in variants:
+        for f in sorted(glob.glob(str(RESULTS / f"{cell_prefix}*__{v}.json"))):
+            r = json.load(open(f))
+            if r["status"] != "ok":
+                lines.append(f"{v:28s} ERROR/{r['status']}")
+                continue
+            rr = r["roofline"]
+            lines.append(f"{v:28s} {rr['compute_s']*1e3:10.2f} "
+                         f"{rr['memory_s']*1e3:10.2f} "
+                         f"{rr['collective_s']*1e3:10.2f} "
+                         f"{rr['bound_s']*1e3:10.2f} "
+                         f"{rr['roofline_fraction']:9.4f}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod16x16"
+    print(table(mesh=mesh))

@@ -1,0 +1,60 @@
+"""Benchmark aggregator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Regenerates every paper table/figure analog (benchmarks.paper_figs), prints
+the roofline table from the dry-run campaign results, and writes everything
+to benchmarks/results/paper_figs.json.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from . import paper_figs, roofline
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def fmt(v, depth=0):
+    if isinstance(v, dict):
+        return "{" + ", ".join(f"{k}: {fmt(x, depth+1)}"
+                               for k, x in v.items()) + "}"
+    if isinstance(v, float):
+        return f"{v:.3g}"
+    if isinstance(v, list):
+        return "[" + ", ".join(fmt(x, depth + 1) for x in v[:4]) + \
+            (", ..." if len(v) > 4 else "") + "]"
+    return str(v)
+
+
+def main():
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = {}
+    print("=" * 78)
+    print("Sense reproduction — paper table/figure analogs")
+    print("=" * 78)
+    for name, fn in paper_figs.ALL.items():
+        res = fn()
+        out[name] = res
+        print(f"\n--- {name} ---")
+        if isinstance(res, dict):
+            for k, v in res.items():
+                print(f"  {k}: {fmt(v)}")
+        else:
+            print(f"  {res}")
+    with open(RESULTS / "paper_figs.json", "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"\n[saved] {RESULTS / 'paper_figs.json'}")
+
+    print("\n" + "=" * 78)
+    print("Roofline (from dry-run campaign artifacts)")
+    print("=" * 78)
+    for mesh in ("pod16x16", "pod2x16x16"):
+        try:
+            print()
+            print(roofline.table(mesh=mesh))
+        except Exception as e:  # campaign not run yet
+            print(f"  [roofline {mesh} unavailable: {e}]")
+
+
+if __name__ == "__main__":
+    main()

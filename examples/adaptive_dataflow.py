@@ -1,0 +1,43 @@
+"""Adaptive Dataflow Configuration walkthrough (paper §V-C, Fig.15/22).
+
+    PYTHONPATH=src python examples/adaptive_dataflow.py
+
+Walks ResNet-50 layer by layer, showing I_mem/W_mem, the RIF and RWF DRAM
+costs, which mode the adaptive configuration picks, and the network totals
+vs Swallow's fixed compute-in-row (RIF) dataflow.
+"""
+from repro.core.dataflow import choose_dataflow, network_dram_access, swallow_dataflow
+from repro.core.systolic import SystolicConfig
+from repro.models.cnn import network_layers
+
+
+def main():
+    cfg = SystolicConfig()
+    layers = network_layers("resnet50", "sense")
+    print(f"{'layer':16s} {'I_mem(Kb)':>10s} {'W_mem(Kb)':>10s} "
+          f"{'RIF(Kb)':>10s} {'RWF(Kb)':>10s} {'mode':>8s}")
+    shown = 0
+    for l in layers:
+        ch = choose_dataflow(l, n_is=cfg.n_is, n_pe=cfg.n_pe,
+                             weight_buffer_bits=cfg.weight_buffer_bits)
+        if ch.mode != "ON_CHIP" and shown < 14:
+            print(f"{l.name:16s} {ch.i_mem/1e3:10.0f} {ch.w_mem/1e3:10.0f} "
+                  f"{ch.d_mem_rif/1e3:10.0f} {ch.d_mem_rwf/1e3:10.0f} "
+                  f"{ch.mode:>8s}")
+            shown += 1
+    for net in ("alexnet", "vgg16", "resnet50", "googlenet"):
+        ls = network_layers(net, "sense")
+        a = network_dram_access(ls, adaptive=True, n_is=cfg.n_is,
+                                n_pe=cfg.n_pe,
+                                weight_buffer_bits=cfg.weight_buffer_bits)
+        f = network_dram_access(ls, adaptive=False, n_is=cfg.n_is,
+                                n_pe=cfg.n_pe,
+                                weight_buffer_bits=cfg.weight_buffer_bits)
+        print(f"{net:10s}: adaptive {a['total_bits']/8e6:8.1f} MB  "
+              f"fixed-RIF {f['total_bits']/8e6:8.1f} MB  "
+              f"reduction {f['total_bits']/a['total_bits']:.2f}x  "
+              f"(RWF on {a['frac_rwf']*100:.0f}% of layers)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Serve a small LM with batched requests through the Sense sparse path.
+
+    PYTHONPATH=src python examples/serve_sparse_lm.py
+
+Wraps repro.launch.serve: balanced-prunes the LM's projections, generates
+with a KV cache for a batch of prompts, reports dense-vs-sparse tokens/s
+and the bitmap-compressed weight footprint.  (Dense pass is warmed up first
+so the comparison excludes compile time.)
+"""
+from repro.launch import serve
+
+
+def main():
+    serve.main(["--arch", "olmo-1b", "--smoke", "--batch", "8",
+                "--prompt-len", "32", "--gen-steps", "32",
+                "--sparsity", "0.5"])
+
+
+if __name__ == "__main__":
+    main()

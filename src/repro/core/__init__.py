@@ -1,0 +1,22 @@
+"""Sense core: the paper's contribution as composable JAX modules.
+
+- pruning:      load-balancing weight pruning (+ FC random pruning, Fig.5 flow)
+- clustering:   channel clustering of dynamic IFM sparsity (Fig.7)
+- compression:  bitmap compression formats (Fig.8 / Fig.12)
+- dataflow:     IFM/weight partition + Adaptive Dataflow Configuration (§V)
+- systolic:     analytical systolic-array performance & energy model (§VI)
+- mapping:      network mapping algorithm / Tab.III computing flow (§V-D)
+- sparse_ops:   balanced-sparse matmul/conv compute wired to Pallas kernels
+"""
+from . import clustering, compression, dataflow, mapping, pruning, systolic
+from .dataflow import LayerSpec, choose_dataflow
+from .pruning import (BalancedSparse, balanced_prune_conv, balanced_prune_rows,
+                      random_prune, to_balanced_sparse)
+from .systolic import SystolicConfig, network_perf
+
+__all__ = [
+    "clustering", "compression", "dataflow", "mapping", "pruning", "systolic",
+    "LayerSpec", "choose_dataflow", "BalancedSparse", "balanced_prune_conv",
+    "balanced_prune_rows", "random_prune", "to_balanced_sparse",
+    "SystolicConfig", "network_perf",
+]

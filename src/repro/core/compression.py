@@ -1,0 +1,154 @@
+"""Bitmap compression formats (Sense §III-C, Fig.8/Fig.12).
+
+A compressed block is ``(data_length, bitmap, NZE list)``: ``data_length``
+is the nonzero count (N_NZEI / N_NZEW), the bitmap flags zero(0)/nonzero(1)
+per position, and the NZE list holds values in raster order.
+
+Two views are provided:
+
+* exact numpy codecs (`bitmap_compress` / `bitmap_decompress`) used by the
+  storage/DRAM model and tests — true variable-length, like the hardware;
+* static-capacity jnp codecs (`bitmap_compress_padded`) used inside jitted
+  code where shapes must be static (capacity = block size, valid prefix =
+  data_length), mirroring how the TPU kernel compacts a tile in VMEM.
+
+`decode_locations` reproduces the paper's coordinate decompression used for
+``Psum_addr = (I_row - W_row) * Wo + (I_col - W_col)`` (Fig.10).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class CompressedBlock:
+    """Exact (variable-length) compressed block, one per IFM tile / kernel."""
+    length: int          # N_NZE
+    bitmap: np.ndarray   # bool, original block shape
+    values: np.ndarray   # [length] nonzero values, raster order
+    shape: tuple         # original block shape
+
+    @property
+    def numel(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def bitmap_compress(block: np.ndarray) -> CompressedBlock:
+    arr = np.asarray(block)
+    bitmap = arr != 0
+    values = arr[bitmap]
+    return CompressedBlock(length=int(values.size), bitmap=bitmap,
+                           values=values, shape=arr.shape)
+
+
+def bitmap_decompress(c: CompressedBlock) -> np.ndarray:
+    out = np.zeros(c.shape, dtype=c.values.dtype if c.values.size else np.float32)
+    out[c.bitmap] = c.values
+    return out
+
+
+def compressed_bits(numel: int, nnz: int, *, elem_bits: int = 16,
+                    length_bits: int = 16) -> int:
+    """Storage cost of one compressed block in bits (Fig.8 layout)."""
+    return length_bits + numel + nnz * elem_bits
+
+
+def compression_ratio(numel: int, nnz: int, *, elem_bits: int = 16) -> float:
+    """dense_bits / compressed_bits — >1 means the format saves DRAM."""
+    dense = numel * elem_bits
+    return dense / compressed_bits(numel, nnz, elem_bits=elem_bits)
+
+
+# ---------------------------------------------------------------------------
+# Static-shape (jit-safe) codecs — the VMEM-tile view
+# ---------------------------------------------------------------------------
+
+def bitmap_compress_padded(block: Array) -> Tuple[Array, Array, Array]:
+    """Compress a block into ``(length, bitmap, padded_values)`` with static shapes.
+
+    ``padded_values`` has the block's full size; the first ``length`` entries
+    are the NZEs in raster order, the rest are zero.  This is exactly the
+    compaction the TPU kernel performs when packing a sparse tile into VMEM.
+    """
+    flat = block.reshape(-1)
+    bitmap = flat != 0
+    length = jnp.sum(bitmap.astype(jnp.int32))
+    # stable compaction: nonzeros first, original order preserved.
+    order = jnp.argsort(~bitmap, stable=True)
+    packed = flat[order]
+    packed = jnp.where(jnp.arange(flat.size) < length, packed, 0)
+    return length, bitmap.reshape(block.shape), packed
+
+
+def bitmap_decompress_padded(length: Array, bitmap: Array, packed: Array) -> Array:
+    """Inverse of `bitmap_compress_padded` (static shapes)."""
+    flat_bitmap = bitmap.reshape(-1)
+    # position of each element within the NZE list (prefix sum of bitmap).
+    nz_rank = jnp.cumsum(flat_bitmap.astype(jnp.int32)) - 1
+    gathered = packed[jnp.clip(nz_rank, 0, packed.size - 1)]
+    out = jnp.where(flat_bitmap, gathered, 0)
+    return out.reshape(bitmap.shape)
+
+
+def decode_locations(bitmap: Array) -> Tuple[Array, Array, Array]:
+    """Bitmap -> (valid, row, col) location info, padded to block size.
+
+    Rows/cols are the coordinates of the NZEs in raster order — the
+    ``(I_row, I_col)`` / ``(W_row, W_col)`` streams of Fig.10.  Entry ``j``
+    is valid iff ``j < N_NZE``.
+    """
+    h, w = bitmap.shape
+    flat = bitmap.reshape(-1)
+    order = jnp.argsort(~flat, stable=True)       # nonzero positions first
+    n = jnp.sum(flat.astype(jnp.int32))
+    valid = jnp.arange(flat.size) < n
+    rows = (order // w).astype(jnp.int32)
+    cols = (order % w).astype(jnp.int32)
+    return valid, jnp.where(valid, rows, 0), jnp.where(valid, cols, 0)
+
+
+# ---------------------------------------------------------------------------
+# FC column format (Fig.12): compress a weight matrix per column
+# ---------------------------------------------------------------------------
+
+def compress_fc_columns(w: np.ndarray) -> list[CompressedBlock]:
+    """Per-column compression of an FC weight matrix ``[out, in]``.
+
+    Column ``c`` (all weights fed by input ``c``) is one compressed block —
+    the outer-product dataflow (§III-D) consumes exactly one input element's
+    column at a time.
+    """
+    w = np.asarray(w)
+    return [bitmap_compress(w[:, c]) for c in range(w.shape[1])]
+
+
+def storage_bits_conv(ifm: np.ndarray, w: np.ndarray, *, tile: int = 7,
+                      elem_bits: int = 16) -> tuple[int, int]:
+    """Compressed storage (bits) of an IFM ``[C,H,W]`` (tiled ``tile x tile``)
+    and conv weights ``[Co,Ci,Hk,Wk]`` (one block per kernel).  Feeds the
+    DRAM-access model in `core.dataflow`."""
+    ifm = np.asarray(ifm)
+    w = np.asarray(w)
+    i_bits = 0
+    c, h, ww = ifm.shape
+    for ch in range(c):
+        for r0 in range(0, h, tile):
+            for c0 in range(0, ww, tile):
+                blk = ifm[ch, r0:r0 + tile, c0:c0 + tile]
+                i_bits += compressed_bits(blk.size, int(np.count_nonzero(blk)),
+                                          elem_bits=elem_bits)
+    w_bits = 0
+    co = w.shape[0]
+    flat = w.reshape(co, -1)
+    for k in range(co):
+        w_bits += compressed_bits(flat.shape[1], int(np.count_nonzero(flat[k])),
+                                  elem_bits=elem_bits)
+    return i_bits, w_bits

@@ -1,0 +1,246 @@
+"""Load-balancing weight pruning (Sense §III-A) and FC random pruning.
+
+The paper's key model-side contribution: prune every kernel (one output
+channel's ``Ci*Hk*Wk`` weight block) to *exactly the same* nonzero count so
+that the systolic array's per-column workload is balanced.  Under the rigid
+systolic dataflow a PE tile's latency is ``max`` over PEs of per-PE work, so
+equal NZE counts remove stragglers (Fig.3: 6Tw -> 4Tw).
+
+On TPU the same property buys something extra: a *static* nonzero count per
+row means the compressed representation ``(values[O,K], indices[O,K])`` has a
+static shape, which is what makes the Pallas ``balanced_spmm`` kernel (and
+jit in general) possible without padding waste.
+
+FC layers use unstructured magnitude ("random" in the paper, after EIE [19])
+pruning to maximize sparsity, balanced afterwards by column clustering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Balanced (load-balancing) pruning
+# ---------------------------------------------------------------------------
+
+def keep_count(numel: int, sparsity: float) -> int:
+    """Number of elements kept per kernel at a given sparsity ratio.
+
+    ``sparsity`` is the *zero* fraction (paper's convention: "cut down the
+    first 50% small elements" == sparsity 0.5).  Always keeps at least one
+    element so a kernel never becomes all-zero.
+    """
+    if not 0.0 <= sparsity < 1.0 + 1e-9:
+        raise ValueError(f"sparsity must be in [0, 1], got {sparsity}")
+    k = int(round(numel * (1.0 - sparsity)))
+    return max(1, min(numel, k))
+
+
+def balanced_prune_rows(w: Array, sparsity: float) -> Tuple[Array, Array]:
+    """Prune a 2-D weight ``[out, in]`` so each *row* keeps exactly K largest-|w|.
+
+    Returns ``(pruned_weights, mask)`` with ``mask.sum(axis=1) == K`` for all
+    rows — the load-balance invariant.
+    """
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weights, got shape {w.shape}")
+    o, n = w.shape
+    k = keep_count(n, sparsity)
+    # top-k by magnitude per row; ties broken by index (stable via argsort).
+    order = jnp.argsort(-jnp.abs(w), axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)  # rank of each element
+    mask = (ranks < k).astype(w.dtype)
+    return w * mask, mask
+
+
+def balanced_prune_conv(w: Array, sparsity: float) -> Tuple[Array, Array]:
+    """Prune conv weights ``[Co, Ci, Hk, Wk]`` per-kernel (per output channel).
+
+    Every output channel's kernel keeps exactly ``K = keep_count(Ci*Hk*Wk)``
+    elements: the Sense load-balancing invariant (Fig.5/Fig.6).
+    """
+    if w.ndim != 4:
+        raise ValueError(f"expected 4-D conv weights, got shape {w.shape}")
+    co = w.shape[0]
+    flat = w.reshape(co, -1)
+    pruned, mask = balanced_prune_rows(flat, sparsity)
+    return pruned.reshape(w.shape), mask.reshape(w.shape)
+
+
+def random_prune(w: Array, sparsity: float, *, rng: jax.Array | None = None,
+                 by_magnitude: bool = True) -> Tuple[Array, Array]:
+    """Unstructured pruning for FC layers (paper §III-D, after EIE [19]).
+
+    ``by_magnitude=True`` prunes the globally smallest-|w| fraction (what the
+    paper actually evaluates: "set the first 80% small elements of [the]
+    whole weight matrix ... zero"); ``False`` prunes uniformly at random
+    (ablation baseline).
+    """
+    numel = w.size
+    k = keep_count(numel, sparsity)
+    if by_magnitude:
+        flat = jnp.abs(w).reshape(-1)
+        order = jnp.argsort(-flat, stable=True)
+        ranks = jnp.argsort(order, stable=True)
+        mask = (ranks < k).astype(w.dtype).reshape(w.shape)
+    else:
+        if rng is None:
+            raise ValueError("rng required for random (non-magnitude) pruning")
+        scores = jax.random.uniform(rng, (numel,))
+        order = jnp.argsort(-scores)
+        ranks = jnp.argsort(order)
+        mask = (ranks < k).astype(w.dtype).reshape(w.shape)
+    return w * mask, mask
+
+
+# ---------------------------------------------------------------------------
+# Balanced sparse format (static-shape, kernel-consumable)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BalancedSparse:
+    """K-nonzeros-per-row representation of a pruned ``[out, in]`` matrix.
+
+    ``values[o, j]`` pairs with input index ``indices[o, j]``; indices are
+    sorted ascending within each row (deterministic layout, coalesced
+    gathers).  The static K is the hardware contract the paper's pruning
+    establishes for the systolic array.
+    """
+    values: Array   # [out, K]
+    indices: Array  # [out, K] int32
+    n_in: int       # dense input dimension
+
+    @property
+    def n_out(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.k / self.n_in
+
+    def to_dense(self) -> Array:
+        dense = jnp.zeros((self.n_out, self.n_in), self.values.dtype)
+        rows = jnp.arange(self.n_out)[:, None]
+        return dense.at[rows, self.indices].set(self.values)
+
+    def tree_flatten(self):
+        return (self.values, self.indices), (self.n_in,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+
+jax.tree_util.register_pytree_node(
+    BalancedSparse, BalancedSparse.tree_flatten, BalancedSparse.tree_unflatten)
+
+
+def to_balanced_sparse(w: Array, sparsity: float | None = None,
+                       k: int | None = None) -> BalancedSparse:
+    """Convert a (possibly already balanced-pruned) 2-D matrix to BalancedSparse.
+
+    Exactly one of ``sparsity`` / ``k`` selects the per-row keep count; the
+    kept elements are the top-K by magnitude (== the balanced pruning mask).
+    """
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weights, got {w.shape}")
+    o, n = w.shape
+    if (sparsity is None) == (k is None):
+        raise ValueError("pass exactly one of sparsity / k")
+    kk = k if k is not None else keep_count(n, sparsity)
+    # indices of top-K magnitudes, then re-sorted ascending per row.
+    top_idx = jnp.argsort(-jnp.abs(w), axis=1, stable=True)[:, :kk]
+    top_idx = jnp.sort(top_idx, axis=1)
+    rows = jnp.arange(o)[:, None]
+    vals = w[rows, top_idx]
+    return BalancedSparse(values=vals, indices=top_idx.astype(jnp.int32), n_in=n)
+
+
+def from_mask(w: Array, mask: Array) -> BalancedSparse:
+    """Build BalancedSparse from an explicit balanced mask (equal row sums)."""
+    counts = np.asarray(jnp.sum(mask != 0, axis=1))
+    if counts.size and not (counts == counts[0]).all():
+        raise ValueError("mask is not load-balanced: row NZE counts differ "
+                         f"(min={counts.min()}, max={counts.max()})")
+    k = int(counts[0]) if counts.size else 0
+    # nonzero positions per row, padded never needed (exact k per row).
+    idx = jnp.argsort(jnp.where(mask != 0, 0, 1), axis=1, stable=True)[:, :k]
+    idx = jnp.sort(idx, axis=1)
+    rows = jnp.arange(w.shape[0])[:, None]
+    return BalancedSparse(values=w[rows, idx] * (mask[rows, idx] != 0),
+                          indices=idx.astype(jnp.int32), n_in=w.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Iterative prune -> retrain flow (paper Fig.5)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PruneScheduleResult:
+    params: object
+    masks: object
+    history: list  # (sparsity, eval_metric) per iteration
+    final_sparsity: float
+
+
+def iterative_prune_retrain(
+    params,
+    *,
+    target_sparsity: float,
+    n_stages: int,
+    prune_fn: Callable,          # (params, sparsity) -> (params, masks)
+    retrain_fn: Callable,        # (params, masks) -> params   (mask-preserving)
+    eval_fn: Callable,           # (params) -> float            (higher better)
+    accuracy_floor: float | None = None,
+) -> PruneScheduleResult:
+    """Gradual prune->retrain->test loop of Fig.5.
+
+    Sparsity ramps with the cubic schedule of Zhu & Gupta [17] from 0 to
+    ``target_sparsity`` over ``n_stages``.  After each stage the model is
+    retrained with masks held fixed and evaluated; if ``accuracy_floor`` is
+    given and the metric drops below it, the loop stops and returns the last
+    acceptable stage (the paper: "testify if the accuracy drops out of
+    boundary ... otherwise save the final pruned weights").
+    """
+    history = []
+    best = (params, None, 0.0)
+    for stage in range(1, n_stages + 1):
+        frac = stage / n_stages
+        sparsity = target_sparsity * (1.0 - (1.0 - frac) ** 3)
+        pruned, masks = prune_fn(params, sparsity)
+        pruned = retrain_fn(pruned, masks)
+        metric = float(eval_fn(pruned))
+        history.append((sparsity, metric))
+        if accuracy_floor is not None and metric < accuracy_floor:
+            break
+        params, best = pruned, (pruned, masks, sparsity)
+    final_params, final_masks, final_sparsity = best
+    return PruneScheduleResult(params=final_params, masks=final_masks,
+                               history=history, final_sparsity=final_sparsity)
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+def nze_counts(x: Array, axis: int | tuple = -1) -> Array:
+    """Nonzero-element counts along ``axis`` (the paper's N_NZE*)."""
+    return jnp.sum((x != 0).astype(jnp.int32), axis=axis)
+
+
+def load_imbalance(nze: Array) -> float:
+    """max/mean NZE ratio: 1.0 == perfectly balanced (Sense's invariant)."""
+    nze = jnp.asarray(nze, jnp.float32)
+    mean = jnp.mean(nze)
+    return float(jnp.where(mean > 0, jnp.max(nze) / jnp.maximum(mean, 1e-9), 1.0))

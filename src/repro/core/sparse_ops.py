@@ -1,0 +1,62 @@
+"""Sparse compute ops: the bridge from Sense's formats to executable JAX.
+
+Implements the §VI-F computing-mode switch (dense vs sparse by sparsity
+thresholds) on top of the Pallas kernels, so model code calls one function
+and gets the paper's co-designed behavior.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kernel_ops
+from ..kernels.sparse_conv import sparse_conv2d as _sparse_conv2d
+from .pruning import BalancedSparse, to_balanced_sparse
+
+Array = jax.Array
+
+# §VI-F thresholds: sparse mode pays off beyond these zero fractions.
+IFM_SPARSE_THRESHOLD = 0.30
+W_SPARSE_THRESHOLD = 0.20
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLinearSpec:
+    """Per-layer computing-mode decision (resolved at trace time — static)."""
+    w_sparsity: float
+    ifm_sparsity: float = 0.0
+
+    @property
+    def use_sparse(self) -> bool:
+        return (self.w_sparsity >= W_SPARSE_THRESHOLD
+                or self.ifm_sparsity >= IFM_SPARSE_THRESHOLD)
+
+
+def sparse_matmul(x: Array, sp: BalancedSparse, *, impl: str = "pallas") -> Array:
+    """y = x @ W.T with W in the balanced format."""
+    return kernel_ops.balanced_spmm(x, sp.values, sp.indices, n_in=sp.n_in,
+                                    impl=impl)
+
+
+def mode_switched_matmul(x: Array, w_dense: Array, spec: SparseLinearSpec, *,
+                         impl: str = "pallas") -> Array:
+    """Dense/sparse mode switch (§VI-F): below thresholds the PE array runs
+    dense (address-calc units gated); above, the balanced sparse path."""
+    if not spec.use_sparse:
+        return jnp.dot(x, w_dense.T, preferred_element_type=jnp.float32
+                       ).astype(x.dtype)
+    sp = to_balanced_sparse(w_dense, sparsity=spec.w_sparsity)
+    return sparse_matmul(x, sp, impl=impl)
+
+
+def sparse_conv2d(x: Array, sp: BalancedSparse, *, hk: int, wk: int,
+                  stride: int = 1, padding: str | int = "SAME",
+                  impl: str = "pallas") -> Array:
+    """Balanced-sparse convolution (im2col + Pallas GEMM)."""
+    def matmul_fn(flat, values, indices, n_in):
+        return kernel_ops.balanced_spmm(flat, values, indices, n_in=n_in,
+                                        impl=impl)
+    return _sparse_conv2d(x, sp.values, sp.indices, sp.n_in, hk=hk, wk=wk,
+                          stride=stride, padding=padding, matmul_fn=matmul_fn)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLMData, SyntheticImageData
+
+__all__ = ["DataConfig", "SyntheticLMData", "SyntheticImageData"]

@@ -1,0 +1,118 @@
+"""Synthetic sharded data pipeline with checkpointable iterator state.
+
+Production posture without a dataset dependency: batches are generated
+deterministically from (seed, step), so (a) the iterator state is just an
+integer — trivially checkpointable and exactly resumable, (b) every data-
+parallel host generates only its shard (no host bottleneck at 1000+ nodes),
+and (c) restarts on a different host count reshard cleanly (the generator is
+indexed by global example id, not by host).
+
+The LM stream is not pure noise: tokens follow a skip-gram-ish Markov chain
+so a model trained on it has learnable structure (loss decreases — used by
+the end-to-end training example and convergence tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+class SyntheticLMData:
+    """Deterministic Markov-chain LM token stream."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # sparse row-stochastic transition structure: each token prefers a
+        # small set of successors — gives the LM something to learn.
+        v = cfg.vocab_size
+        self._succ = rng.integers(0, v, size=(v, 4))
+        self.step = 0                      # checkpointable iterator state
+
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    def load_state_dict(self, state: dict):
+        assert state["seed"] == self.cfg.seed, "data seed mismatch on resume"
+        self.step = int(state["step"])
+
+    def batch_at(self, step: int, *, host_id: int = 0, n_hosts: int = 1
+                 ) -> dict:
+        """Generate (the host's shard of) the batch for ``step``."""
+        cfg = self.cfg
+        assert cfg.global_batch % n_hosts == 0
+        per_host = cfg.global_batch // n_hosts
+        out = np.empty((per_host, cfg.seq_len), np.int32)
+        for i in range(per_host):
+            ex_id = step * cfg.global_batch + host_id * per_host + i
+            r = np.random.default_rng((cfg.seed, ex_id))
+            toks = np.empty(cfg.seq_len, np.int32)
+            toks[0] = r.integers(cfg.vocab_size)
+            choices = r.integers(0, 4, size=cfg.seq_len)
+            noise = r.random(cfg.seq_len) < 0.1
+            rand_toks = r.integers(0, cfg.vocab_size, size=cfg.seq_len)
+            for t in range(1, cfg.seq_len):
+                toks[t] = (rand_toks[t] if noise[t]
+                           else self._succ[toks[t - 1], choices[t]])
+            out[i] = toks
+        return {"tokens": jnp.asarray(out)}
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            b = self.batch_at(self.step)
+            self.step += 1
+            yield b
+
+
+class SyntheticImageData:
+    """Synthetic labeled images for the CNN prune->retrain example.
+
+    Class k's images are k-dependent low-frequency patterns + noise, so a
+    small CNN can reach high accuracy quickly (needed to demonstrate the
+    paper's "little accuracy loss" pruning claim end-to-end).
+    """
+
+    def __init__(self, *, img: int = 32, n_classes: int = 10,
+                 batch: int = 64, seed: int = 0):
+        self.img, self.n_classes, self.batch, self.seed = (
+            img, n_classes, batch, seed)
+        rng = np.random.default_rng(seed)
+        # one spatial prototype per class
+        xs = np.linspace(0, 2 * np.pi, img)
+        self._protos = np.stack([
+            np.sin((k % 4 + 1) * xs)[:, None] * np.cos((k // 4 + 1) * xs)[None, :]
+            for k in range(n_classes)])[..., None] * np.ones(3)
+        self.step = 0
+
+    def state_dict(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def load_state_dict(self, state):
+        self.step = int(state["step"])
+
+    def batch_at(self, step: int) -> dict:
+        r = np.random.default_rng((self.seed, step))
+        labels = r.integers(0, self.n_classes, size=self.batch)
+        imgs = (self._protos[labels]
+                + 0.35 * r.standard_normal(
+                    (self.batch, self.img, self.img, 3)))
+        return {"image": jnp.asarray(imgs, jnp.float32),
+                "label": jnp.asarray(labels, jnp.int32)}
+
+    def __iter__(self):
+        while True:
+            b = self.batch_at(self.step)
+            self.step += 1
+            yield b

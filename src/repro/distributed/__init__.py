@@ -1,0 +1,5 @@
+from .sharding import (dim_spec, dp_axes, logical_spec, shard_batch,
+                       with_hidden_sharding)
+
+__all__ = ["dim_spec", "dp_axes", "logical_spec", "shard_batch",
+           "with_hidden_sharding"]

@@ -1,0 +1,59 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantized all-reduce payload + error-feedback residual: the
+quantization error of step t is added back into step t+1's gradient, so the
+compressed SGD trajectory tracks the exact one (Karimireddy et al.; standard
+at 1000+-node scale where gradient all-reduce is ICI/DCN-bound).
+
+Pure-jax pytree transform — plugs into ``optim.adamw_update`` via the
+``grad_transform`` hook.  ``quantize``/``dequantize`` are also used by the
+tests to bound the compression error.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, *, block: int = 256):
+    """Per-block symmetric int8 quantization.  Returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype):
+    out = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return out[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads, residuals):
+    """Quantize grads+residual, return (dequantized grads, new residuals).
+
+    The all-reduce happens on the dequantized values in this single-process
+    container; on a real fleet the int8 payload is what crosses ICI — the
+    numerics (and the error-feedback correction) are identical.
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s, g.shape, jnp.float32)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def zero_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,134 @@
+"""Sharding rules: divisibility-guarded NamedSharding construction.
+
+The production mesh is ``(data, model)`` single-pod or ``(pod, data, model)``
+multi-pod (launch/mesh.py).  Parallelism mapping (DESIGN.md §5):
+
+* ``model``  — tensor parallel: attention heads / d_ff columns / vocab rows /
+               MoE experts (expert parallelism is TP over the E axis).
+* ``data``   — batch data-parallel *and* FSDP: the non-TP dim of every large
+               parameter is sharded over ``data`` so parameter/optimizer
+               memory scales with the full chip count.
+* ``pod``    — pure data parallel (composes with ``data`` for the batch);
+               the multi-pod dry-run proves this axis shards.
+
+Every rule is divisibility-guarded: a dim is sharded over an axis only if
+the axis size divides it, so one rule set serves all 10 architectures and
+all shapes without uneven-sharding surprises.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """Data-parallel axes in order (pod outermost when present)."""
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def dim_spec(mesh: Mesh, dim_size: int, *candidates):
+    """First candidate (axis name or tuple of names) that divides dim_size.
+
+    Returns None (replicated dim) when nothing divides.  A candidate tuple is
+    tried whole, then shrunk from the right (e.g. ("pod","data") -> ("pod",)).
+    """
+    for cand in candidates:
+        if cand is None:
+            return None
+        if isinstance(cand, str):
+            cand = (cand,)
+        # drop axes the mesh doesn't have (e.g. "pod" on the single-pod mesh)
+        cand = tuple(a for a in cand if a in mesh.shape)
+        while cand:
+            if dim_size % _axes_size(mesh, cand) == 0:
+                return cand if len(cand) > 1 else cand[0]
+            cand = cand[:-1]
+    return None
+
+
+def logical_spec(mesh: Mesh, shape: Sequence[int], plan: Sequence) -> P:
+    """Build a PartitionSpec for ``shape``; ``plan[i]`` is a list of axis
+    candidates for dim i (or [] / None to replicate)."""
+    dims = []
+    used: set = set()
+    for size, cands in zip(shape, plan):
+        if not cands:
+            dims.append(None)
+            continue
+        cands = [c for c in cands if _not_used(c, used)]
+        d = dim_spec(mesh, size, *cands)
+        if d is not None:
+            used.update((d,) if isinstance(d, str) else d)
+        dims.append(d)
+    return P(*dims)
+
+
+def _not_used(cand, used: set) -> bool:
+    if cand is None:
+        return True
+    names = (cand,) if isinstance(cand, str) else tuple(cand)
+    return not any(n in used for n in names)
+
+
+def shard_batch(mesh: Mesh, batch_size: int) -> tuple | None:
+    """dp axes prefix that divides the batch (None -> replicated batch)."""
+    axes = dp_axes(mesh)
+    out, prod = [], 1
+    for a in axes:
+        if batch_size % (prod * mesh.shape[a]) == 0:
+            out.append(a)
+            prod *= mesh.shape[a]
+    return tuple(out) if out else None
+
+
+def with_hidden_sharding(mesh: Mesh, h: jax.Array, *,
+                         seq_parallel: bool = True):
+    """Constrain hidden states [B, S, D] between layers.
+
+    Batch over dp; sequence over ``model`` (sequence parallelism) when it
+    divides and seq_parallel is requested — this is what keeps per-device
+    activation residuals small enough for the 64/94-layer archs.
+    """
+    b, s, _ = h.shape
+    dp = shard_batch(mesh, b)
+    sp = dim_spec(mesh, s, "model") if (seq_parallel and s > 1) else None
+    return jax.lax.with_sharding_constraint(
+        h, NamedSharding(mesh, P(dp, sp, None)))
+
+
+def with_channel_sharding(mesh: Mesh, h: jax.Array):
+    """Constrain hidden states [B, S, D] with D over ``model``.
+
+    The right layout for recurrent (SSM/WKV) families: their time-chunked
+    scans slice the sequence dim, so sequence sharding would force a full
+    re-gather per chunk; channel/head sharding flows through in_proj ->
+    recurrence -> out_proj with no sequence collectives at all
+    (EXPERIMENTS.md §Perf A, iteration 2).
+    """
+    b, _, d = h.shape
+    dp = shard_batch(mesh, b)
+    dsp = dim_spec(mesh, d, "model")
+    return jax.lax.with_sharding_constraint(
+        h, NamedSharding(mesh, P(dp, None, dsp)))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

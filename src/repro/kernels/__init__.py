@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for Sense's compute hot-spots.
+
+- balanced_spmm: K-per-row balanced sparse x dense GEMM (the load-balanced
+  pruning contract turned into a static-shape TPU kernel)
+- bitmap_spmm:   bitmap-decode -> dense VMEM tile -> MXU matmul (the paper's
+  compression format, tile-granular on TPU)
+- sparse_conv:   im2col + balanced GEMM for CONV layers
+
+ops.py holds the jit'd public wrappers (padding, custom_vjp, XLA fallback);
+ref.py holds the pure-jnp oracles every kernel is validated against.
+"""
+from . import ops, ref
+from .ops import balanced_spmm, bitmap_spmm, encode_bitmap
+from .sparse_conv import im2col, sparse_conv2d
+
+__all__ = ["ops", "ref", "balanced_spmm", "bitmap_spmm", "encode_bitmap",
+           "im2col", "sparse_conv2d"]

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: balanced sparse x dense matmul (y = x @ W.T).
+
+W is the Sense balanced-sparse format — exactly K nonzeros per output row,
+``(values[O, K], indices[O, K])``.  Load balance is what makes this kernel
+possible with *static* shapes: every row-tile gathers the same K columns'
+worth of work, so there is no padding waste and no per-row control flow —
+the TPU-native restatement of the paper's equal-NZE-per-PE-column invariant
+(DESIGN.md §3).
+
+Tiling: grid over (M/bm, O/bo); the x block [bm, N] stays resident in VMEM
+while the kernel walks the K dimension in ``bk`` chunks (weight-stationary
+within a tile, input-stationary across the O grid — the RIF-flavored order;
+`ops.balanced_spmm` can transpose the grid for the RWF-flavored order per
+the Adaptive Dataflow Configuration).
+
+VMEM budget per step (f32): bm*N (x) + 2*bo*K (vals+idx) + bm*bo*bk (gather
+buffer) + bm*bo (acc).  Defaults bm=bo=128, bk=128 keep the gather buffer at
+8 MiB f32 upper bound; shrink bk for large tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(x_ref, v_ref, i_ref, o_ref, *, bk: int):
+    """One (m, o) output tile: acc[m, o] = sum_j x[m, idx[o, j]] * v[o, j]."""
+    x = x_ref[...]                      # [bm, N]
+    vals = v_ref[...]                   # [bo, K]
+    idx = i_ref[...]                    # [bo, K] int32
+    bm = x.shape[0]
+    bo = vals.shape[0]
+    k = vals.shape[1]
+    nsteps = k // bk
+
+    def body(step, acc):
+        start = step * bk
+        idx_c = jax.lax.dynamic_slice_in_dim(idx, start, bk, axis=1)
+        val_c = jax.lax.dynamic_slice_in_dim(vals, start, bk, axis=1)
+        # gather the K-chunk's input columns: [bm, bo, bk]
+        xg = jnp.take(x, idx_c, axis=1)
+        return acc + jnp.einsum("mok,ok->mo", xg, val_c,
+                                preferred_element_type=jnp.float32)
+
+    acc = jnp.zeros((bm, bo), jnp.float32)
+    acc = jax.lax.fori_loop(0, nsteps, body, acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def balanced_spmm_pallas(x: Array, values: Array, indices: Array, *,
+                         bm: int = 128, bo: int = 128, bk: int = 128,
+                         interpret: bool = True) -> Array:
+    """Raw pallas_call; shapes must already be tile-aligned (see ops.py).
+
+    x: [M, N]; values/indices: [O, K] with M % bm == O % bo == K % bk == 0.
+    """
+    m, n = x.shape
+    o, k = values.shape
+    assert m % bm == 0 and o % bo == 0 and k % bk == 0, (m, o, k, bm, bo, bk)
+    grid = (m // bm, o // bo)
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),       # x row-tile
+            pl.BlockSpec((bo, k), lambda i, j: (j, 0)),       # values
+            pl.BlockSpec((bo, k), lambda i, j: (j, 0)),       # indices
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, o), x.dtype),
+        interpret=interpret,
+    )(x, values, indices)

@@ -1,0 +1,140 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Responsibilities: tile-alignment padding, block-size selection, dtype
+handling, a differentiable path (Pallas forward + jnp backward via
+custom_vjp), and an XLA fallback (`impl="xla"`) that is the same math
+without pallas_call — used on backends without Pallas support and by the
+production (pjit) path where XLA's own fusions win.
+
+This container is CPU-only, so ``interpret=True`` is the default; on real
+TPU set ``REPRO_PALLAS_INTERPRET=0``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .balanced_spmm import balanced_spmm_pallas
+from .bitmap_spmm import bitmap_encode, bitmap_spmm_pallas
+
+Array = jax.Array
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest power-of-two block <= preferred that keeps padding sane."""
+    b = preferred
+    while b > 8 and dim < b // 2:
+        b //= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
+# balanced_spmm: y = x @ W.T, W = (values[O,K], indices[O,K]) over N inputs
+# ---------------------------------------------------------------------------
+
+def _balanced_spmm_xla(x: Array, values: Array, indices: Array) -> Array:
+    """Gather formulation (differentiable, shard-friendly): the production
+    path.  y[m,o] = sum_j x[m, idx[o,j]] * v[o,j]."""
+    xg = jnp.take(x, indices, axis=1)              # [M, O, K]
+    return jnp.einsum("mok,ok->mo", xg, values,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _balanced_spmm_pallas_padded(x: Array, values: Array, indices: Array,
+                                 bm: int, bo: int, bk: int) -> Array:
+    m, n = x.shape
+    o, k = values.shape
+    bm = _pick_block(m, bm)
+    bo = _pick_block(o, bo)
+    bk = _pick_block(k, bk)
+    mp, op_, kp = _round_up(m, bm), _round_up(o, bo), _round_up(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    vp = jnp.pad(values, ((0, op_ - o), (0, kp - k)))
+    ip = jnp.pad(indices, ((0, op_ - o), (0, kp - k)))  # pad idx 0, val 0 -> 0
+    y = balanced_spmm_pallas(xp, vp, ip, bm=bm, bo=bo, bk=bk,
+                             interpret=_INTERPRET)
+    return y[:m, :o]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _balanced_spmm(x, values, indices, n_in, impl):
+    if impl == "pallas":
+        return _balanced_spmm_pallas_padded(x, values, indices, 128, 128, 128)
+    return _balanced_spmm_xla(x, values, indices)
+
+
+def _balanced_fwd(x, values, indices, n_in, impl):
+    y = _balanced_spmm(x, values, indices, n_in, impl)
+    return y, (x, values, indices)
+
+
+def _balanced_bwd(n_in, impl, res, dy):
+    x, values, indices = res
+    # dx = dy @ W  (scatter of values);  dvalues[o,j] = sum_m dy[m,o] x[m,idx]
+    w = ref.balanced_dense(values, indices, n_in)
+    dx = jnp.dot(dy, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    xg = jnp.take(x, indices, axis=1)              # [M, O, K]
+    dvals = jnp.einsum("mo,mok->ok", dy, xg,
+                       preferred_element_type=jnp.float32).astype(values.dtype)
+    return dx, dvals, None
+
+
+_balanced_spmm.defvjp(_balanced_fwd, _balanced_bwd)
+
+
+def balanced_spmm(x: Array, values: Array, indices: Array, *, n_in: int,
+                  impl: str = "pallas") -> Array:
+    """Differentiable balanced-sparse matmul.  x: [..., N] -> [..., O].
+
+    impl: "pallas" (TPU kernel, interpret on CPU) | "xla" (gather+einsum).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _balanced_spmm(x2, values, indices.astype(jnp.int32), n_in, impl)
+    return y.reshape(*lead, values.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# bitmap_spmm: y = x @ W.T, W bitmap-compressed
+# ---------------------------------------------------------------------------
+
+def bitmap_spmm(x: Array, bitmap: Array, packed: Array, offsets: Array, *,
+                bn: int = 128, impl: str = "pallas") -> Array:
+    """Bitmap-compressed matmul (inference path; not differentiable —
+    compressed weights are a deployment format)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m, n = x2.shape
+    o = bitmap.shape[0]
+    if impl == "xla":
+        y = ref.bitmap_spmm_ref(x2, bitmap, packed)
+        return y.reshape(*lead, o)
+    bm = _pick_block(m, 128)
+    bo = _pick_block(o, 128)
+    assert n % bn == 0, (n, bn, "pad N before encoding")
+    mp, op_ = _round_up(m, bm), _round_up(o, bo)
+    xp = jnp.pad(x2, ((0, mp - m), (0, 0)))
+    bmp = jnp.pad(bitmap, ((0, op_ - o), (0, 0)))
+    pak = jnp.pad(packed, ((0, op_ - o), (0, 0)))
+    off = jnp.pad(offsets, ((0, op_ - o), (0, 0)))
+    y = bitmap_spmm_pallas(xp, bmp, pak, off, bm=bm, bo=bo, bn=bn,
+                           interpret=_INTERPRET)
+    return y[:m, :o].astype(x.dtype).reshape(*lead, o)
+
+
+def encode_bitmap(w: Array, *, bn: int = 128):
+    """Dense [O, N] -> (bitmap, packed, offsets); N must be bn-aligned."""
+    return bitmap_encode(w, bn)
+
+
+__all__ = ["balanced_spmm", "bitmap_spmm", "encode_bitmap"]

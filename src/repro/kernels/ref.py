@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package is validated against these references in
+interpret mode across shape/dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def balanced_dense(values: Array, indices: Array, n_in: int) -> Array:
+    """Densify a balanced-sparse matrix ``(values[O,K], indices[O,K])``."""
+    o = values.shape[0]
+    dense = jnp.zeros((o, n_in), values.dtype)
+    rows = jnp.arange(o)[:, None]
+    return dense.at[rows, indices].add(values)
+
+
+def balanced_spmm_ref(x: Array, values: Array, indices: Array) -> Array:
+    """y = x @ W.T for W balanced-sparse [O, N]; x: [M, N] -> y: [M, O].
+
+    Built by scatter-densify + dense matmul — deliberately independent of the
+    gather formulation used in the kernel.
+    """
+    w = balanced_dense(values, indices, x.shape[-1])
+    return jnp.dot(x, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def bitmap_dense(bitmap: Array, packed: Array) -> Array:
+    """Densify a bitmap-compressed matrix.
+
+    bitmap: [O, N] {0,1}; packed: [O, K] rows of NZE values in raster order
+    (padded with anything past the row's NZE count).
+    """
+    nz_rank = jnp.cumsum(bitmap.astype(jnp.int32), axis=1) - 1
+    nz_rank = jnp.clip(nz_rank, 0, packed.shape[1] - 1)
+    gathered = jnp.take_along_axis(packed, nz_rank, axis=1)
+    return jnp.where(bitmap != 0, gathered, 0).astype(packed.dtype)
+
+
+def bitmap_spmm_ref(x: Array, bitmap: Array, packed: Array) -> Array:
+    """y = x @ W.T for W bitmap-compressed [O, N]."""
+    w = bitmap_dense(bitmap, packed)
+    return jnp.dot(x, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def sparse_conv2d_ref(x: Array, w_dense: Array, *, stride: int = 1,
+                      padding: str | int = "SAME") -> Array:
+    """Dense conv oracle: x [B,H,W,Ci], w [Hk,Wk,Ci,Co] -> [B,Ho,Wo,Co]."""
+    if isinstance(padding, int):
+        pad = [(padding, padding), (padding, padding)]
+    else:
+        pad = padding
+    return jax.lax.conv_general_dilated(
+        x, w_dense, window_strides=(stride, stride), padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,51 @@
+"""Pallas-backed sparse convolution: im2col + balanced-sparse GEMM.
+
+The paper's CONV processing keeps the whole kernel compressed and skips
+zero products (§III-C).  The TPU-native form: lower the convolution to a
+GEMM over extracted patches (XLA's `conv_general_dilated_patches`, itself a
+data movement the TPU does well) and run the contraction through the
+`balanced_spmm` Pallas kernel, whose K-per-row invariant comes from the
+load-balancing pruning of each Co kernel.
+
+The patch matrix's column order is (Ci, Hk, Wk) raster order, matching the
+flattening used by `core.pruning.balanced_prune_conv`, so pruned-conv
+weights convert directly with `to_balanced_sparse(w.reshape(Co, -1))`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def im2col(x: Array, hk: int, wk: int, *, stride: int = 1,
+           padding: str | int = "SAME") -> Array:
+    """x [B,H,W,Ci] -> patches [B, Ho, Wo, Ci*Hk*Wk] (Ci-major column order)."""
+    if isinstance(padding, int):
+        pad = [(padding, padding), (padding, padding)]
+    else:
+        pad = padding
+    patches = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(hk, wk), window_strides=(stride, stride),
+        padding=pad, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return patches  # feature dim is Ci*Hk*Wk, Ci-major
+
+
+def sparse_conv2d(x: Array, values: Array, indices: Array, n_in: int, *,
+                  hk: int, wk: int, stride: int = 1,
+                  padding: str | int = "SAME",
+                  matmul_fn=None) -> Array:
+    """Balanced-sparse conv: x [B,H,W,Ci], kernel (values[Co,K], indices) over
+    the flattened (Ci*Hk*Wk) patch axis.  ``matmul_fn`` defaults to the
+    Pallas `balanced_spmm` via ops.py (injected to avoid an import cycle)."""
+    if matmul_fn is None:
+        from . import ops
+        matmul_fn = ops.balanced_spmm
+    b, h, w, ci = x.shape
+    patches = im2col(x, hk, wk, stride=stride, padding=padding)
+    bo, ho, wo, feat = patches.shape
+    assert feat == n_in, (feat, n_in)
+    flat = patches.reshape(b * ho * wo, feat)
+    y = matmul_fn(flat, values, indices, n_in=n_in)
+    return y.reshape(b, ho, wo, values.shape[0])

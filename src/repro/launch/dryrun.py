@@ -1,0 +1,383 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+``.lower().compile()`` must succeed on the production meshes for every cell,
+and the compiled artifact yields the roofline terms (EXPERIMENTS.md
+§Dry-run / §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b \
+        --shape train_4k [--multi-pod] [--variant v0_baseline]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results are written incrementally to benchmarks/results/dryrun/<cell>.json.
+"""
+# The VERY FIRST lines, before ANY other import: jax locks the device count
+# on first init, and the dry-run needs 512 placeholder host devices.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCHS, SHAPES, get_config, shape_applicable  # noqa: E402
+from ..distributed.sharding import tree_shardings  # noqa: E402
+from ..models import build_model  # noqa: E402
+from ..models.api import batch_partition_spec, input_specs  # noqa: E402
+from ..optim import AdamWConfig, adamw_init, adamw_update  # noqa: E402
+from . import hlo_cost  # noqa: E402
+from .mesh import (HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                   make_production_mesh)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO shape string, e.g. 'f32[16,128]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO text.
+
+    Builds a symbol table of instruction result shapes, then for each
+    collective op line sums the shapes of its operands.  Counts are
+    per-device (the compiled module is the per-device SPMD program).
+    """
+    # instruction result shapes: "%name = f32[1,2]{1,0} op(...)"
+    sym: dict[str, int] = {}
+    defre = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([^=]*?)\s+"
+                       r"([\w\-]+)\(", re.M)
+    for m in defre.finditer(hlo_text):
+        sym[m.group(1)] = _shape_bytes(m.group(2))
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in defre.finditer(hlo_text):
+        op = m.group(3)
+        kind = next((k for k in _COLLECTIVES
+                     if op == k or op.startswith(k + "-")), None)
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # the -start op carries the operands
+        # operand list: up to matching close paren of this call
+        start = m.end()
+        depth, i = 1, start
+        while i < len(hlo_text) and depth:
+            if hlo_text[i] == "(":
+                depth += 1
+            elif hlo_text[i] == ")":
+                depth -= 1
+            i += 1
+        args = hlo_text[start:i - 1]
+        for a in re.finditer(r"%?([\w.\-]+)", args):
+            if a.group(1) in sym:
+                per_kind[kind] += sym[a.group(1)]
+                counts[kind] += 1
+    return {"bytes_per_kind": per_kind, "op_counts": counts,
+            "total_bytes": sum(per_kind.values())}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytical MODEL_FLOPS (global): 6*N*D train / 2*N*D inference, plus
+    the attention quadratic term; N = active non-embedding params."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_total = cfg.param_count() - cfg.vocab_size * cfg.d_model
+    if cfg.family == "moe":
+        # active = shared + top_k of routed experts
+        d, f, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+        routed_all = cfg.n_experts * 3 * d * f
+        routed_act = cfg.top_k * 3 * d * f
+        n_total = n_total - l * routed_all + l * routed_act
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        attn_layers = 0
+    elif cfg.family == "hybrid":
+        attn_layers = -(-cfg.n_layers // max(cfg.attn_every, 1))
+    else:
+        attn_layers = cfg.n_layers
+    if shape.kind == "train":
+        tokens = b * s
+        return (6.0 * n_total * tokens
+                + 6.0 * attn_layers * b * s * s * cfg.n_heads * cfg.head_dim)
+    if shape.kind == "prefill":
+        tokens = b * s
+        return (2.0 * n_total * tokens
+                + 2.0 * attn_layers * b * s * s * cfg.n_heads * cfg.head_dim)
+    # decode: one token per sequence against an S-long cache
+    base = 2.0 * n_total * b
+    if cfg.family == "ssm":
+        attn = 0.0
+    elif cfg.family == "hybrid":
+        n_attn = -(-cfg.n_layers // max(cfg.attn_every, 1))
+        attn = 4.0 * n_attn * b * s * cfg.n_heads * cfg.head_dim
+    else:
+        attn = 4.0 * cfg.n_layers * b * s * cfg.n_heads * cfg.head_dim
+    return base + attn
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh, variant: str = "v0_baseline"):
+    """Returns (step_fn, in_specs_tree, args_tree, out_shardings)."""
+    cfg = get_config(arch)
+    cfg = apply_variant(cfg, variant)
+    shape = SHAPES[shape_name]
+    bundle = build_model(cfg, mesh)
+    pspecs = bundle.param_specs()
+    params_sds = jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    batch_sds = input_specs(cfg, shape)
+    bspecs = batch_partition_spec(cfg, shape, mesh)
+
+    p_sh = tree_shardings(mesh, pspecs)
+    b_sh = tree_shardings(mesh, bspecs)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        opt_sh = {"m": p_sh, "v": p_sh,
+                  "step": NamedSharding(mesh, P())}
+        accum = max(1, cfg.grad_accum)
+
+        def train_step(params, opt_state, batch):
+            if accum == 1:
+                loss, grads = jax.value_and_grad(bundle.train_loss)(
+                    params, batch)
+            else:
+                # microbatch gradient accumulation: peak activation
+                # residual memory shrinks by `accum`
+                mb = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum,
+                                        *x.shape[1:]), batch)
+
+                def one(acc, mbatch):
+                    g_acc, l_acc = acc
+                    l, g = jax.value_and_grad(bundle.train_loss)(
+                        params, mbatch)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), _ = jax.lax.scan(one, (zero, 0.0), mb)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = loss / accum
+            params, opt_state, metrics = adamw_update(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, loss, metrics["grad_norm"]
+
+        in_sh = (p_sh, opt_sh, b_sh)
+        out_sh = (p_sh, opt_sh, NamedSharding(mesh, P()),
+                  NamedSharding(mesh, P()))
+        return train_step, in_sh, (params_sds, opt_sds, batch_sds), out_sh
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return bundle.prefill(params, batch)
+        c_sh = tree_shardings(mesh, bundle.cache_specs(shape.global_batch))
+        logits_sh = NamedSharding(mesh, P(None, None))
+        return (prefill_step, (p_sh, b_sh), (params_sds, batch_sds),
+                (logits_sh, c_sh))
+
+    # decode
+    cache_sds = jax.eval_shape(
+        lambda: bundle.init_cache(shape.global_batch, shape.seq_len))
+    c_sh = tree_shardings(mesh, bundle.cache_specs(shape.global_batch))
+
+    def decode_step(params, batch, cache):
+        return bundle.decode_step(params, batch, cache)
+
+    logits_sh = NamedSharding(mesh, P(None, None))
+    return (decode_step, (p_sh, b_sh, c_sh),
+            (params_sds, batch_sds, cache_sds), (logits_sh, c_sh))
+
+
+def apply_variant(cfg, variant: str):
+    """Perf-iteration variants (EXPERIMENTS.md §Perf hillclimbs)."""
+    import dataclasses
+    if variant in ("v0_baseline", ""):
+        return cfg
+    if variant == "v1_sparse_serving":
+        return dataclasses.replace(cfg, sparse_serving=True)
+    if variant.startswith("v_"):
+        # generic knob override: v_key=value,key=value
+        kvs = dict(kv.split("=") for kv in variant[2:].split(","))
+        typed = {}
+        for k, v in kvs.items():
+            cur = getattr(cfg, k)
+            typed[k] = (v.lower() in ("1", "true") if isinstance(cur, bool)
+                        else type(cur)(v))
+        return dataclasses.replace(cfg, **typed)
+    raise ValueError(f"unknown variant {variant}")
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             variant: str = "v0_baseline", save: bool = True) -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_tag}__{variant}"
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        rec = {"cell": cell_id, "status": "skipped", "reason": why}
+        if save:
+            _save(cell_id, rec)
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        step_fn, in_sh, args_sds, out_sh = build_cell(
+            arch, shape_name, mesh, variant)
+        # NOTE: on TPU the launcher donates params/opt (train) and cache
+        # (decode) so outputs alias inputs; XLA:CPU has no donation support
+        # and distorts buffer assignment when asked, so the dry-run lowers
+        # without it and the peak-memory projection accounts for aliasing.
+        shape = SHAPES[shape_name]
+        lowered = jax.jit(step_fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        walked = hlo_cost.analyze(hlo)       # trip-count-aware (per device)
+        n_chips = mesh.size
+        flops_dev = walked.flops
+        bytes_dev = walked.bytes
+        coll = {"bytes_per_kind": {k: v for k, v in walked.coll.items()},
+                "op_counts": dict(walked.coll_ops),
+                "total_bytes": walked.coll_bytes}
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+        # TPU-projected peak: train/decode outputs (params+opt / cache) are
+        # donated on real hardware, so they alias arguments; only prefill
+        # materializes a genuinely new output (the KV cache).
+        peak_dev = mem_rec["argument_bytes"] + mem_rec["temp_bytes"]
+        if shape.kind == "prefill":
+            peak_dev += mem_rec["output_bytes"]
+        # roofline terms (per-device quantities; seconds on TPU v5e)
+        t_compute = flops_dev / PEAK_FLOPS_BF16
+        t_memory = bytes_dev / HBM_BW
+        t_coll = coll["total_bytes"] / ICI_BW
+        dominant = max((("compute", t_compute), ("memory", t_memory),
+                        ("collective", t_coll)), key=lambda kv: kv[1])[0]
+        mf = model_flops(arch, shape_name)
+        rec = {
+            "cell": cell_id, "arch": arch, "shape": shape_name,
+            "mesh": mesh_tag, "variant": variant, "status": "ok",
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            # xla's loop-body-once numbers, kept for reference
+            "xla_flops_looponce": float(cost.get("flops", 0.0)),
+            "xla_bytes_looponce": float(cost.get("bytes accessed", 0.0)),
+            "collectives": coll,
+            "memory": mem_rec,
+            "peak_bytes_per_device": peak_dev,
+            "fits_hbm": bool(peak_dev <= HBM_BYTES),
+            "model_flops_global": mf,
+            "model_flops_ratio": (mf / (flops_dev * n_chips)
+                                  if flops_dev else 0.0),
+            "roofline": {
+                "compute_s": t_compute, "memory_s": t_memory,
+                "collective_s": t_coll, "dominant": dominant,
+                "bound_s": max(t_compute, t_memory, t_coll),
+                # fraction of the bound that is useful model compute
+                "roofline_fraction": (
+                    (mf / n_chips / PEAK_FLOPS_BF16)
+                    / max(t_compute, t_memory, t_coll)
+                    if max(t_compute, t_memory, t_coll) > 0 else 0.0),
+            },
+        }
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        rec = {"cell": cell_id, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    if save:
+        _save(cell_id, rec)
+    return rec
+
+
+def _save(cell_id: str, rec: dict):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS_DIR / f"{cell_id}.json", "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="v0_baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    cells = ([(args.arch, args.shape)] if not args.all else
+             [(a, s) for a in ARCHS for s in SHAPES])
+    for arch, shape in cells:
+        mesh_tag = "pod2x16x16" if args.multi_pod else "pod16x16"
+        cell_id = f"{arch}__{shape}__{mesh_tag}__{args.variant}"
+        if args.skip_done and (RESULTS_DIR / f"{cell_id}.json").exists():
+            prev = json.loads((RESULTS_DIR / f"{cell_id}.json").read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[skip-done] {cell_id}")
+                continue
+        rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       variant=args.variant)
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"[ok] {rec['cell']}: compile={rec['compile_s']}s "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"dominant={r['dominant']} bound={r['bound_s']*1e3:.2f}ms "
+                  f"fits_hbm={rec['fits_hbm']}")
+        elif rec["status"] == "skipped":
+            print(f"[skipped] {rec['cell']}: {rec['reason']}")
+        else:
+            print(f"[ERROR] {rec['cell']}: {rec['error']}")
+
+
+if __name__ == "__main__":
+    main()

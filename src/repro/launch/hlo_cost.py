@@ -1,0 +1,387 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` visits every while-loop body ONCE, so a
+scan-over-layers model (O(1) HLO by design) under-counts FLOPs/bytes/
+collective traffic by the trip count.  This walker parses the optimized HLO
+text (``compiled.as_text()``), multiplies loop bodies by trip counts
+recovered from loop-condition constants, and accumulates:
+
+* flops        — dot/convolution from shapes (2*M*N*K), elementwise 1/elem
+* bytes        — operand + result bytes per top-level op; fusions count at
+                 their boundary only (inner elementwise traffic is fused)
+* collectives  — operand bytes per kind (all-reduce / all-gather /
+                 reduce-scatter / all-to-all / collective-permute),
+                 multiplied by enclosing loop trip counts
+
+The counts are per-device: the compiled module is the per-device SPMD
+program.  Conditionals take the max-cost branch (upper bound; recorded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+                "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+# opcodes with no real data traffic
+_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "after-all", "opt-barrier", "partition-id", "replica-id"}
+
+_COMP_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([a-z][\w\-]*)\(")
+_NAME_RE = re.compile(r"%?([A-Za-z_][\w.\-]*)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|true_computation|"
+                      r"false_computation)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _dims(dim_str: str):
+    return [int(d) for d in dim_str.split(",") if d]
+
+
+def _elems(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(m.group(2)):
+            n *= d
+        total += n
+    return total
+
+
+def _bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(m.group(2)):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Inst:
+    name: str
+    type_str: str
+    opcode: str
+    args_str: str
+    attrs_str: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_ops: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+            self.coll_ops[k] += int(other.coll_ops[k] * mult)
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def parse_computations(hlo: str) -> tuple[dict, str]:
+    """Split HLO text into {comp_name: [Inst]}; returns (comps, entry_name)."""
+    comps: dict[str, list[Inst]] = {}
+    entry = None
+    cur: list[Inst] | None = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            name = m.group(2)
+            if m.group(1):
+                entry = name
+            cur = comps.setdefault(name, [])
+            continue
+        if cur is None:
+            continue
+        if line.strip().startswith("}"):
+            cur = None
+            continue
+        im = _INST_RE.match(line)
+        if not im:
+            continue
+        # split args (inside parens) from attrs (after matching close paren)
+        start = im.end()
+        depth, i = 1, start
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        cur.append(Inst(name=im.group(1), type_str=im.group(2),
+                        opcode=im.group(3), args_str=line[start:i - 1],
+                        attrs_str=line[i:],
+                        is_root="ROOT" in line[:im.end(1)]))
+    return comps, entry
+
+
+def _operand_names(inst: Inst) -> list[str]:
+    """Operand instruction names (CPU HLO prints '%name' operands)."""
+    names = re.findall(r"%([\w.\-]+)", inst.args_str)
+    if names:
+        return names
+    return [m.group(1) for m in _NAME_RE.finditer(inst.args_str)]
+
+
+def _operand_types_inline(inst: Inst) -> list[str]:
+    """Inline operand types when the printer includes them
+    ('f32[2,3]{1,0} %name')."""
+    return [m.group(1) for m in re.finditer(
+        r"(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+%?[\w.\-]+", inst.args_str)]
+
+
+def _dot_flops(inst: Inst, types: dict) -> float:
+    """2 * result_elems * contraction_size."""
+    out_elems = _elems(inst.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs_str)
+    inline = _operand_types_inline(inst)
+    names = _operand_names(inst)
+    lhs_type = inline[0] if inline else types.get(names[0]) if names else None
+    if m and lhs_type:
+        dims_m = _SHAPE_RE.search(lhs_type)
+        if dims_m:
+            lhs_dims = _dims(dims_m.group(2))
+            k = 1
+            for ci in _dims(m.group(1)):
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
+            return 2.0 * out_elems * k
+    return 2.0 * out_elems
+
+
+def _conv_flops(inst: Inst, types: dict) -> float:
+    out_elems = _elems(inst.type_str)
+    inline = _operand_types_inline(inst)
+    names = _operand_names(inst)
+    ktype = (inline[1] if len(inline) > 1 else
+             types.get(names[1]) if len(names) > 1 else None)
+    dl = re.search(r"dim_labels=(\w+)_(\w+)->", inst.attrs_str)
+    if dl and ktype:
+        km = _SHAPE_RE.search(ktype)
+        if km:
+            kdims = _dims(km.group(2))
+            klabels = dl.group(2)
+            kelems = 1
+            for d in kdims:
+                kelems *= d
+            o_idx = klabels.find("o")
+            out_feats = kdims[o_idx] if 0 <= o_idx < len(kdims) else 1
+            return 2.0 * out_elems * (kelems / max(out_feats, 1))
+    return 2.0 * out_elems
+
+
+def _operand_bytes(inst: Inst, sym: dict) -> int:
+    inline = _operand_types_inline(inst)
+    if inline:
+        return sum(_bytes(t) for t in inline)
+    total = 0
+    for n in _operand_names(inst):
+        total += sym.get(n, 0)
+    return total
+
+
+def trip_count(cond_insts: list[Inst]) -> int:
+    """Loop trip count from the condition computation's compare constant.
+
+    jax scans lower to `while(i < C)` with i starting at 0 — C is the trip
+    count; the constant lives in the condition computation (possibly as the
+    operand of a wrapped-compare fusion).  Fallback: 1."""
+    best = None
+    for inst in cond_insts:
+        if inst.opcode == "constant":
+            # '%c = s32[] constant(16)' -> args_str == '16'
+            m = re.match(r"\s*(\d+)\s*$", inst.args_str)
+            if m:
+                v = int(m.group(1))
+                best = v if best is None else max(best, v)
+        m = _CONST_RE.search(inst.args_str + inst.attrs_str)
+        if m:
+            v = int(m.group(1))
+            best = v if best is None else max(best, v)
+    return best if best and best > 0 else 1
+
+
+def _fusion_cost(insts: list[Inst]) -> tuple[float, float]:
+    """(flops, bytes) of one fusion computation.
+
+    Bytes are charged at the fusion boundary with slice-awareness: a
+    parameter consumed only through dynamic-slice is charged the slice size
+    (that's all the HBM traffic it causes), a dynamic-update-slice target is
+    charged the update size (aliased in-place write), any other use charges
+    the full parameter.  Intermediates are register/cache traffic — free.
+    """
+    params = {i.name for i in insts if i.opcode == "parameter"}
+    types = {i.name: i.type_str for i in insts}
+    charge: dict[str, float] = {}
+    flops = 0.0
+    root: Inst | None = None
+    slice_like = {"dynamic-slice", "slice", "gather"}
+    for inst in insts:
+        if inst.is_root:
+            root = inst
+        op = inst.opcode
+        if op in _FREE or op == "parameter":
+            continue
+        if op not in slice_like and op != "dynamic-update-slice":
+            flops += _elems(inst.type_str)
+        names = _operand_names(inst)
+        if op in slice_like:
+            if names and names[0] in params:
+                charge[names[0]] = max(charge.get(names[0], 0.0),
+                                       float(_bytes(inst.type_str)))
+            for n in names[1:]:
+                if n in params:
+                    charge[n] = max(charge.get(n, 0.0),
+                                    float(_bytes(types.get(n, ""))))
+            continue
+        if op == "dynamic-update-slice":
+            # operand0 = target (aliased), operand1 = update
+            if names and names[0] in params and len(names) > 1:
+                upd = float(_bytes(types.get(names[1], "")))
+                charge[names[0]] = max(charge.get(names[0], 0.0), upd)
+            for n in names[1:]:
+                if n in params:
+                    charge[n] = max(charge.get(n, 0.0),
+                                    float(_bytes(types.get(n, ""))))
+            continue
+        for n in names:
+            if n in params:
+                charge[n] = max(charge.get(n, 0.0),
+                                float(_bytes(types.get(n, ""))))
+    if root is not None and root.opcode == "dynamic-update-slice":
+        rnames = _operand_names(root)
+        out_b = float(_bytes(types.get(rnames[1], ""))) if len(rnames) > 1 \
+            else float(_bytes(root.type_str))
+    else:
+        out_b = float(_bytes(root.type_str)) if root is not None else 0.0
+    return flops, sum(charge.values()) + out_b
+
+
+def analyze(hlo: str) -> Cost:
+    comps, entry = parse_computations(hlo)
+    memo: dict[str, Cost] = {}
+    fusion_memo: dict[str, tuple[float, float]] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()          # cycle guard
+        total = Cost()
+        sym = {i.name: _bytes(i.type_str) for i in comps.get(name, [])}
+        types = {i.name: i.type_str for i in comps.get(name, [])}
+        for inst in comps.get(name, []):
+            op = inst.opcode
+            if op in _FREE:
+                continue
+            if op.endswith("-done"):
+                continue
+            kind = next((k for k in _COLLECTIVES
+                         if op == k or op.startswith(k + "-")), None)
+            if kind is not None:
+                ob = _operand_bytes(inst, sym)
+                total.coll[kind] += ob
+                total.coll_ops[kind] += 1
+                total.bytes += ob + _bytes(inst.type_str)
+                continue
+            if op == "while":
+                calls = dict(re.findall(
+                    r"(body|condition)=%?([\w.\-]+)", inst.attrs_str))
+                body = calls.get("body")
+                cond = calls.get("condition")
+                tm = _TRIP_RE.search(inst.attrs_str)
+                if tm:            # XLA annotates known trip counts directly
+                    trips = int(tm.group(1))
+                else:
+                    trips = trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    total.add(comp_cost(body), trips)
+                continue
+            if op == "conditional":
+                branches = []
+                bm = _BRANCHES_RE.search(inst.attrs_str)
+                if bm:
+                    branches = _NAME_RE.findall(bm.group(1))
+                else:
+                    branches = [c for _, c in re.findall(
+                        r"(true_computation|false_computation)=%?([\w.\-]+)",
+                        inst.attrs_str)]
+                if branches:
+                    costs = [comp_cost(b) for b in branches]
+                    total.add(max(costs, key=lambda c: c.flops))
+                continue
+            if op == "fusion":
+                cm = _CALL_RE.search(inst.attrs_str)
+                if cm:
+                    if cm.group(1) not in fusion_memo:
+                        fusion_memo[cm.group(1)] = _fusion_cost(
+                            comps.get(cm.group(1), []))
+                    fl, by = fusion_memo[cm.group(1)]
+                    total.flops += fl
+                    total.bytes += by
+                else:
+                    total.bytes += (_operand_bytes(inst, sym)
+                                    + _bytes(inst.type_str))
+                continue
+            if op in ("dynamic-slice", "slice", "gather"):
+                total.bytes += 2.0 * _bytes(inst.type_str)
+                continue
+            if op == "dynamic-update-slice":
+                names = _operand_names(inst)
+                upd = sym.get(names[1], 0) if len(names) > 1 else 0
+                total.bytes += 2.0 * upd
+                continue
+            if op in ("call", "custom-call", "map", "reduce",
+                      "reduce-window", "sort", "scatter",
+                      "select-and-scatter"):
+                total.bytes += _operand_bytes(inst, sym) + _bytes(inst.type_str)
+                cm = _CALL_RE.search(inst.attrs_str)
+                if cm and op != "custom-call":
+                    inner = comp_cost(cm.group(1))
+                    total.flops += inner.flops
+                    # inner traffic is fused; only flops escape the boundary
+                continue
+            if op == "dot":
+                total.flops += _dot_flops(inst, types)
+                total.bytes += _operand_bytes(inst, sym) + _bytes(inst.type_str)
+                continue
+            if op == "convolution":
+                total.flops += _conv_flops(inst, types)
+                total.bytes += _operand_bytes(inst, sym) + _bytes(inst.type_str)
+                continue
+            # default elementwise-ish op
+            total.flops += _elems(inst.type_str)
+            total.bytes += _operand_bytes(inst, sym) + _bytes(inst.type_str)
+        memo[name] = total
+        return total
+
+    if entry is None:
+        return Cost()
+    return comp_cost(entry)

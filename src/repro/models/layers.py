@@ -1,0 +1,270 @@
+"""Shared model primitives (pure functional JAX).
+
+Memory-scaling choices that matter at the assigned shapes:
+
+* `blocked_causal_attention` — flash-style online-softmax attention,
+  double-chunked (query and kv blocks) so train_4k/prefill_32k never
+  materialize an S x S score matrix.
+* `chunked_cross_entropy` — scans over sequence chunks so [B, S, V] logits
+  (V up to 256k) are never materialized.
+* GQA is computed with the grouped einsum (no KV head repetition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng: Array, n_in: int, n_out: int, dtype=jnp.float32) -> Array:
+    scale = 1.0 / math.sqrt(n_in)
+    return (jax.random.normal(rng, (n_in, n_out)) * scale).astype(dtype)
+
+
+def embed_init(rng: Array, vocab: int, dim: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(rng, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, gamma: Array | None, *, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    if gamma is not None:
+        y = y * gamma
+    return y.astype(x.dtype)
+
+
+def layer_norm(x: Array, gamma: Array | None = None, beta: Array | None = None,
+               *, eps: float = 1e-5) -> Array:
+    """LayerNorm; with gamma=beta=None it is OLMo's non-parametric LN."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if gamma is not None:
+        y = y * gamma
+    if beta is not None:
+        y = y + beta
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, *, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, *, theta: float = 10000.0) -> Array:
+    """x: [..., S, H, dh]; positions: [..., S] (int)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta=theta)               # [dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(angles)[..., None, :]                     # [..., S, 1, dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def blocked_causal_attention(q: Array, k: Array, v: Array, *,
+                             q_chunk: int = 512, kv_chunk: int = 1024,
+                             causal: bool = True, mesh=None) -> Array:
+    """Flash-style attention: q [B,S,H,dh], k/v [B,S,KH,dh], H = KH*G.
+
+    Online softmax over kv chunks inside a scan over q chunks; peak score
+    memory is [B, KH, G, q_chunk, kv_chunk].  Chunks must divide S (caller
+    pads); fully-masked kv chunks are still visited (static grid) — the
+    ~2x causal overcompute is a recorded perf-iteration target.
+
+    Distribution: with a mesh, the q-chunk position dim is sharded over
+    ``model`` (query-sequence-parallel).  This is head-count agnostic — it
+    works for GQA with any KH (unlike head sharding, which replicates score
+    blocks whenever KH or G don't divide the axis) and KV is small enough to
+    gather per device.
+    """
+    b, s, h, dh = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    assert s % q_chunk == 0 and s % kv_chunk == 0, (s, q_chunk, kv_chunk)
+    scale = 1.0 / math.sqrt(dh)
+    nq, nk = s // q_chunk, s // kv_chunk
+
+    qs = q.reshape(b, nq, q_chunk, kh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(b, nk, kv_chunk, kh, dh)
+    vs = v.reshape(b, nk, kv_chunk, kh, dh)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from ..distributed import sharding as shd
+        dp = shd.shard_batch(mesh, b)
+        axis = mesh.shape.get("model", 1)
+        if kh % axis == 0:
+            # KV-head sharding: zero attention collectives
+            qs = jax.lax.with_sharding_constraint(
+                qs, NamedSharding(mesh, P(None, dp, None, "model", None,
+                                          None)))
+            ks = jax.lax.with_sharding_constraint(
+                ks, NamedSharding(mesh, P(dp, None, None, "model", None)))
+            vs = jax.lax.with_sharding_constraint(
+                vs, NamedSharding(mesh, P(dp, None, None, "model", None)))
+        elif g % axis == 0:
+            # query-group sharding: KV replicated (small), scores sharded
+            qs = jax.lax.with_sharding_constraint(
+                qs, NamedSharding(mesh, P(None, dp, None, None, "model",
+                                          None)))
+        else:
+            # head-count agnostic fallback: query-sequence parallel
+            qsp = shd.dim_spec(mesh, q_chunk, "model")
+            qs = jax.lax.with_sharding_constraint(
+                qs, NamedSharding(mesh, P(None, dp, qsp, None, None, None)))
+            ks = jax.lax.with_sharding_constraint(
+                ks, NamedSharding(mesh, P(dp, None, None, None, None)))
+            vs = jax.lax.with_sharding_constraint(
+                vs, NamedSharding(mesh, P(dp, None, None, None, None)))
+
+    def q_block(carry, inp):
+        qi, qc = inp                                    # [], [B,Cq,KH,G,dh]
+        m0 = jnp.full((b, kh, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_chunk, dh), jnp.float32)
+
+        def kv_block(acc, inp2):
+            ki, kc, vc = inp2
+            m, l, a = acc
+            sc = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                            preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = kpos[None, :] <= qpos[:, None]
+                sc = jnp.where(mask[None, None, None], sc, -jnp.inf)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(sc - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(sc), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc,
+                            preferred_element_type=jnp.float32)
+            a = a * corr[..., None] + pv
+            return (m_new, l, a), None
+
+        (m, l, a), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (jnp.arange(nk), ks.transpose(1, 0, 2, 3, 4),
+             vs.transpose(1, 0, 2, 3, 4)))
+        out = a / jnp.maximum(l[..., None], 1e-30)      # [B,KH,G,Cq,dh]
+        return carry, out.transpose(0, 3, 1, 2, 4)      # [B,Cq,KH,G,dh]
+
+    # checkpoint per q-block: without it the scan saves every score block
+    # (the full S x S matrix across blocks) as backward residuals.
+    q_block = jax.checkpoint(q_block)
+    _, outs = jax.lax.scan(q_block, 0, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_len: Array) -> Array:
+    """Single-token attention: q [B,1,H,dh] vs cache [B,Smax,KH,dh].
+
+    ``cache_len`` [B] masks unwritten cache slots.
+    """
+    b, _, h, dh = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, 1, kh, g, dh)
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                    preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    mask = pos[None, :] < cache_len[:, None]            # [B, Smax]
+    sc = jnp.where(mask[:, None, None, None, :], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(x @ w_gate) * (x @ w_up),
+                      w_down)
+
+
+def gelu_mlp(x: Array, w_in: Array, w_out: Array) -> Array:
+    return jax.nn.gelu(x @ w_in, approximate=True) @ w_out
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(x: Array, emb: Array, labels: Array, *,
+                          chunk: int = 512, z_loss: float = 1e-4,
+                          mask: Array | None = None) -> Array:
+    """Mean next-token CE without materializing [B, S, V] logits.
+
+    x: [B, S, D] final hidden states; emb: [V, D] (tied softmax weights);
+    labels: [B, S] int32.  Scans over S in ``chunk`` pieces; within a chunk
+    logits are [B, chunk, V] (sharded over model on V by the caller's pjit).
+    ``z_loss`` is the auxiliary logit-norm stabilizer (production trick).
+    """
+    b, s, d = x.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    xs = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    if mask is None:
+        ms = jnp.ones((n, b, chunk), jnp.float32)
+    else:
+        ms = mask.reshape(b, n, chunk).transpose(1, 0, 2).astype(jnp.float32)
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = jnp.einsum("bsd,vd->bsv", xc, emb,
+                            preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        zl = z_loss * jnp.square(lse) * mc
+        loss_sum, count = carry
+        return (loss_sum + jnp.sum(nll + zl), count + jnp.sum(mc)), None
+
+    # checkpoint per chunk: otherwise each chunk's [B, chunk, V] logits are
+    # saved as backward residuals — at V=256k that alone overflows HBM.
+    body = jax.checkpoint(body)
+    (loss_sum, count), _ = jax.lax.scan(body, (0.0, 0.0), (xs, ls, ms))
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+def causal_lm_labels(tokens: Array, pad_id: int = -1) -> Tuple[Array, Array]:
+    """Shift tokens for next-token prediction; returns (labels, mask)."""
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    if pad_id >= 0:
+        mask = mask * (labels != pad_id)
+    return labels, mask

@@ -1,0 +1,353 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay.  Covers the ``rwkv6-3b`` assignment.
+
+Structure per layer: time-mix (the WKV linear-attention recurrence with
+data-dependent decay w_t produced by a LoRA head) + channel-mix (token-shift
+gated FFN).  All projections are computed in parallel over the sequence;
+only the WKV state recurrence scans over time — state [B, H, dh, dh] is the
+O(1) memory that makes the ``long_500k`` cell runnable for this family.
+
+Sense applicability (DESIGN.md §4): balanced pruning targets the R/K/V/G/O
+and channel-mix matrices; the recurrence itself is elementwise (dense), the
+exact analogue of the paper leaving non-CONV/FC ops dense.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed import sharding as shd
+from .api import ModelBundle, register_family
+from .layers import causal_lm_labels, chunked_cross_entropy, layer_norm
+
+Array = jax.Array
+
+
+def _cdtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng: Array) -> Dict[str, Any]:
+    d, f, l, r = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.rwkv_lora_rank
+    dt = _pdtype(cfg)
+    ks = jax.random.split(rng, 20)
+
+    def mat(key, *shape, scale_dim=-2):
+        scale = 1.0 / math.sqrt(shape[scale_dim])
+        return (jax.random.normal(key, (l, *shape)) * scale).astype(dt)
+
+    blocks = {
+        "ln1": jnp.ones((l, d), dt), "ln1_b": jnp.zeros((l, d), dt),
+        "ln2": jnp.ones((l, d), dt), "ln2_b": jnp.zeros((l, d), dt),
+        # time-mix lerp coefficients (static) for r/k/v/g
+        "mu_r": jnp.full((l, d), 0.5, dt), "mu_k": jnp.full((l, d), 0.5, dt),
+        "mu_v": jnp.full((l, d), 0.5, dt), "mu_g": jnp.full((l, d), 0.5, dt),
+        "mu_w": jnp.full((l, d), 0.5, dt),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(xw A) B))
+        "w0": jnp.full((l, d), -6.0, dt),
+        "wA": mat(ks[0], d, r), "wB": (jax.random.normal(ks[1], (l, r, d))
+                                       * 0.01).astype(dt),
+        "wr": mat(ks[2], d, d), "wkm": mat(ks[3], d, d),
+        "wv": mat(ks[4], d, d), "wg": mat(ks[5], d, d),
+        "wo": mat(ks[6], d, d),
+        "u": (jax.random.normal(ks[7], (l, d)) * 0.1).astype(dt),
+        "gn": jnp.ones((l, d), dt),     # per-head group-norm gamma
+        # channel mix
+        "cmu_k": jnp.full((l, d), 0.5, dt), "cmu_r": jnp.full((l, d), 0.5, dt),
+        "ck": mat(ks[8], d, f), "cv": mat(ks[9], f, d), "cr": mat(ks[10], d, d),
+    }
+    return {
+        "embed": (jax.random.normal(ks[11], (cfg.vocab_size, d)) * 0.02
+                  ).astype(dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((d,), dt),
+    }
+
+
+def param_specs(cfg: ModelConfig, mesh) -> Dict[str, Any]:
+    if mesh is None:
+        shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return jax.tree.map(lambda _: P(), shapes)
+    d, f = cfg.d_model, cfg.d_ff
+
+    def ls(shape, plan):
+        return shd.logical_spec(mesh, (0, *shape), [None, *plan])
+
+    vec = P(None, None)
+    blocks = {
+        "ln1": vec, "ln1_b": vec, "ln2": vec, "ln2_b": vec,
+        "mu_r": vec, "mu_k": vec, "mu_v": vec, "mu_g": vec, "mu_w": vec,
+        "w0": vec, "u": vec, "gn": vec, "cmu_k": vec, "cmu_r": vec,
+        "wA": ls((d, cfg.rwkv_lora_rank), [[("data", "pod")], None]),
+        "wB": ls((cfg.rwkv_lora_rank, d), [None, [("data", "pod")]]),
+        "wr": ls((d, d), [[("data", "pod")], ["model"]]),
+        "wkm": ls((d, d), [[("data", "pod")], ["model"]]),
+        "wv": ls((d, d), [[("data", "pod")], ["model"]]),
+        "wg": ls((d, d), [[("data", "pod")], ["model"]]),
+        "wo": ls((d, d), [["model"], [("data", "pod")]]),
+        "ck": ls((d, f), [[("data", "pod")], ["model"]]),
+        "cv": ls((f, d), [["model"], [("data", "pod")]]),
+        "cr": ls((d, d), [[("data", "pod")], ["model"]]),
+    }
+    return {
+        "embed": shd.logical_spec(mesh, (cfg.vocab_size, d),
+                                  [["model"], [("data", "pod")]]),
+        "blocks": blocks,
+        "final_norm": P(None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Time mix / channel mix
+# ---------------------------------------------------------------------------
+
+def _shift(x: Array, last: Array) -> Array:
+    """Token shift: x[:, t] <- x[:, t-1], with ``last`` filling t=0."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, state, *, chunk: int = 64):
+    """WKV recurrence over time, chunk-checkpointed.
+
+    r/k/v/w: [B, T, H, dh] (w already in (0,1) decay form); u: [H, dh];
+    state: [B, H, dh, dh] (key-major).  Returns (out [B,T,H,dh], new state).
+
+        out_t = r_t . (S_{t-1} + (u*k_t) ⊗ v_t)
+        S_t   = diag(w_t) S_{t-1} + k_t ⊗ v_t
+
+    The outer scan walks T/chunk segments saving only the inter-chunk state;
+    the inner per-step scan is rematerialized in backward — without this the
+    per-step state residuals are O(T * B * H * dh^2) and blow HBM at 4k seq.
+    """
+    t = r.shape[1]
+    c = min(chunk, t)
+    while t % c:
+        c //= 2
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                     # [B, H, dh] each
+        kv = kt[..., :, None] * vt[..., None, :]       # [B, H, dh, dh]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    def chunk_step(s, inp):                      # inp: [C, B, H, dh] x 4
+        return jax.lax.scan(step, s, inp)
+
+    # [B, T, H, dh] -> [T/C, C, B, H, dh]
+    xs = tuple(jnp.moveaxis(x, 1, 0).reshape(t // c, c, *x.shape[:1],
+                                             *x.shape[2:])
+               for x in (r, k, v, w))
+    state, out = jax.lax.scan(jax.checkpoint(chunk_step), state, xs)
+    out = out.reshape(t, *out.shape[2:])         # [T, B, H, dh]
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def _wkv_chunked(r, k, v, w, u, state, *, chunk: int = 32):
+    """Chunk-parallel WKV (beyond-paper; mirrors zamba2's SSD variant).
+
+    With L_t[k] = sum_{tau<=t} log w_tau[k] (per channel, <=0 inside a
+    chunk), the recurrence factorizes into chunk-local matmuls:
+
+        y_t = r_t.(exp(L_{t-1}) * S_0)                       (inter)
+            + sum_{s<t} (r_t exp(L_{t-1}-L_s)) . k_s  v_s    (intra)
+            + (r_t.(u*k_t)) v_t                              (diag)
+        S'  = exp(L_C) S_0 + sum_s exp(L_C - L_s) k_s (x) v_s
+
+    exp(-L_s) grows within a chunk, so the chunk is kept short (32) and the
+    math is f32 — the same trade the RWKV CUDA kernels make.  State IO is
+    per-chunk instead of per-token.
+    """
+    t = r.shape[1]
+    c = min(chunk, t)
+    while t % c:
+        c //= 2
+
+    def to_chunks(z):
+        zt = jnp.moveaxis(z, 1, 0)
+        return zt.reshape(t // c, c, *zt.shape[1:])
+
+    def chunk_step(s, inp):
+        rc, kc, vc, wc = inp                   # [c, B, H, dh]
+        logw = jnp.log(jnp.maximum(wc, 1e-37))
+        l_incl = jnp.cumsum(logw, axis=0)      # L_t (inclusive)
+        l_prev = l_incl - logw                 # L_{t-1} (exclusive)
+        r_p = rc * jnp.exp(l_prev)             # r'_t
+        k_m = kc * jnp.exp(-l_incl)            # k'_s
+        # inter-chunk
+        y = jnp.einsum("cbhk,bhkv->cbhv", r_p, s)
+        # intra-chunk, strictly causal (s < t)
+        sc = jnp.einsum("cbhk,sbhk->csbh", r_p, k_m)
+        mask = jnp.tril(jnp.ones((c, c), bool), -1)[:, :, None, None]
+        sc = jnp.where(mask, sc, 0.0)
+        y = y + jnp.einsum("csbh,sbhv->cbhv", sc, vc)
+        # diagonal bonus term
+        y = y + jnp.einsum("cbhk,cbhk->cbh", rc, u[None, None] * kc
+                           )[..., None] * vc
+        # state update
+        k_f = kc * jnp.exp(l_incl[-1][None] - l_incl)
+        s = jnp.exp(l_incl[-1])[..., None] * s \
+            + jnp.einsum("cbhk,cbhv->bhkv", k_f, vc)
+        return s, y
+
+    xs = tuple(to_chunks(z) for z in (r, k, v, w))
+    state, y = jax.lax.scan(jax.checkpoint(chunk_step), state, xs)
+    y = y.reshape(t, *y.shape[2:])
+    return jnp.moveaxis(y, 0, 1), state
+
+
+def _time_mix(cfg, lp, x: Array, shift_last: Array, state: Array, mesh):
+    """x: [B, T, D]. Returns (out, new_shift_last, new_state)."""
+    cd = _cdtype(cfg)
+    b, t, d = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    xs = _shift(x, shift_last)
+
+    def lerp(mu):
+        return x + (xs - x) * mu.astype(cd)
+
+    r = lerp(lp["mu_r"]) @ lp["wr"].astype(cd)
+    k = lerp(lp["mu_k"]) @ lp["wkm"].astype(cd)
+    v = lerp(lp["mu_v"]) @ lp["wv"].astype(cd)
+    g = jax.nn.silu(lerp(lp["mu_g"]) @ lp["wg"].astype(cd))
+    # data-dependent decay (the Finch contribution)
+    xw = lerp(lp["mu_w"])
+    w_log = lp["w0"].astype(cd) + jnp.tanh(xw @ lp["wA"].astype(cd)) \
+        @ lp["wB"].astype(cd)
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32)))        # [B,T,D] in (0,1)
+
+    hs = (b, t, nh, hd)
+    wkv = _wkv_chunked if (cfg.ssm_mode == "chunked" and t > 1) else _wkv_scan
+    out, state = wkv(
+        r.reshape(hs).astype(jnp.float32), k.reshape(hs).astype(jnp.float32),
+        v.reshape(hs).astype(jnp.float32), w.reshape(hs),
+        lp["u"].astype(jnp.float32).reshape(nh, hd), state)
+    out = out.reshape(b, t, d)
+    # per-head group norm
+    mu = out.reshape(b, t, nh, hd).mean(-1, keepdims=True)
+    var = out.reshape(b, t, nh, hd).var(-1, keepdims=True)
+    out = ((out.reshape(b, t, nh, hd) - mu) * jax.lax.rsqrt(var + 1e-5)
+           ).reshape(b, t, d) * lp["gn"].astype(jnp.float32)
+    out = (out.astype(cd) * g) @ lp["wo"].astype(cd)
+    return out, x[:, -1, :], state
+
+
+def _channel_mix(cfg, lp, x: Array, shift_last: Array):
+    cd = _cdtype(cfg)
+    xs = _shift(x, shift_last)
+    xk = x + (xs - x) * lp["cmu_k"].astype(cd)
+    xr = x + (xs - x) * lp["cmu_r"].astype(cd)
+    k = jnp.square(jax.nn.relu(xk @ lp["ck"].astype(cd)))
+    out = jax.nn.sigmoid(xr @ lp["cr"].astype(cd)) * (k @ lp["cv"].astype(cd))
+    return out, x[:, -1, :]
+
+
+def _block(cfg, mesh, lp, h, att_shift, ffn_shift, state):
+    x = layer_norm(h, lp["ln1"], lp["ln1_b"]).astype(_cdtype(cfg))
+    att, att_shift, state = _time_mix(cfg, lp, x, att_shift, state, mesh)
+    h = h + att.astype(h.dtype)
+    x = layer_norm(h, lp["ln2"], lp["ln2_b"]).astype(_cdtype(cfg))
+    ffn, ffn_shift = _channel_mix(cfg, lp, x, ffn_shift)
+    h = h + ffn.astype(h.dtype)
+    if mesh is not None and h.shape[1] > 1:
+        h = shd.with_channel_sharding(mesh, h)
+    return h, att_shift, ffn_shift, state
+
+
+# ---------------------------------------------------------------------------
+# Bundle
+# ---------------------------------------------------------------------------
+
+@register_family("rwkv6")
+def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    remat_policy = jax.checkpoint_policies.nothing_saveable
+
+    def init(rng):
+        return init_params(cfg, rng)
+
+    def _zero_states(b):
+        return (jnp.zeros((cfg.n_layers, b, d), jnp.float32),      # att shift
+                jnp.zeros((cfg.n_layers, b, d), jnp.float32),      # ffn shift
+                jnp.zeros((cfg.n_layers, b, nh, hd, hd), jnp.float32))
+
+    def _forward(params, batch, states):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        h = jnp.take(params["embed"], tokens, axis=0).astype(_cdtype(cfg))
+        if mesh is not None and h.shape[1] > 1:
+            h = shd.with_channel_sharding(mesh, h)
+        att_s, ffn_s, wkv_s = states
+
+        def body(h, xs):
+            lp, a_s, f_s, w_s = xs
+            h, a_s, f_s, w_s = _block(cfg, mesh, lp, h, a_s, f_s, w_s)
+            return h, (a_s, f_s, w_s)
+        body_fn = (jax.checkpoint(body, policy=remat_policy)
+                   if cfg.remat else body)
+        h, (att_s, ffn_s, wkv_s) = jax.lax.scan(
+            body_fn, h, (params["blocks"], att_s, ffn_s, wkv_s))
+        h = layer_norm(h, params["final_norm"], None)
+        return h, (att_s, ffn_s, wkv_s)
+
+    def train_loss(params, batch):
+        tokens = batch["tokens"]
+        h, _ = _forward(params, batch, _zero_states(tokens.shape[0]))
+        labels, mask = causal_lm_labels(tokens)
+        return chunked_cross_entropy(h, params["embed"], labels,
+                                     chunk=min(cfg.loss_chunk, h.shape[1]),
+                                     mask=mask)
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        h, states = _forward(params, batch, _zero_states(tokens.shape[0]))
+        logits = (h[:, -1].astype(jnp.float32)
+                  @ params["embed"].astype(jnp.float32).T)
+        return logits, {"att_shift": states[0], "ffn_shift": states[1],
+                        "wkv": states[2]}
+
+    def init_cache(batch_size, max_len):
+        a, f, w = _zero_states(batch_size)
+        return {"att_shift": a, "ffn_shift": f, "wkv": w}
+
+    def decode_step(params, batch, cache):
+        states = (cache["att_shift"], cache["ffn_shift"], cache["wkv"])
+        h, states = _forward(params, batch, states)
+        logits = (h[:, -1].astype(jnp.float32)
+                  @ params["embed"].astype(jnp.float32).T)
+        return logits, {"att_shift": states[0], "ffn_shift": states[1],
+                        "wkv": states[2]}
+
+    def specs():
+        return param_specs(cfg, mesh)
+
+    def cache_specs(batch_size):
+        if mesh is None:
+            return {"att_shift": P(), "ffn_shift": P(), "wkv": P()}
+        dp = shd.shard_batch(mesh, batch_size)
+        hsp = shd.dim_spec(mesh, nh, "model")
+        return {"att_shift": P(None, dp, None),
+                "ffn_shift": P(None, dp, None),
+                "wkv": P(None, dp, hsp, None, None)}
+
+    return ModelBundle(cfg=cfg, init=init, train_loss=train_loss,
+                       prefill=prefill, decode_step=decode_step,
+                       init_cache=init_cache, param_specs=specs,
+                       cache_specs=cache_specs)

@@ -1,0 +1,507 @@
+"""Zamba2 (arXiv:2411.15242): Mamba2 backbone + a *shared* attention block
+applied every ``cfg.attn_every`` layers.  Covers the ``zamba2-1.2b``
+assignment (hybrid family; runs the long_500k cell — SSM state is O(1), the
+KV cache exists only for the periodic shared block and is sequence-sharded).
+
+Mamba2 (SSD) per layer:
+    in_proj -> [z (d_in) | xBC (d_in + 2N) | dt (H)]
+    causal depthwise conv over xBC, then split x/B/C
+    a_t = exp(-softplus(dt + bias) * exp(A_log));  state [B, H, dh, N]
+    h_t = a_t * h_{t-1} + dt * B_t ⊗ x_t ;  y_t = C_t . h_t + D * x_t
+    out = out_proj(rmsnorm(y) * silu(z))
+
+The time recurrence is chunk-checkpointed like rwkv6's WKV scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed import sharding as shd
+from .api import ModelBundle, register_family
+from .layers import (apply_rope, blocked_causal_attention, causal_lm_labels,
+                     chunked_cross_entropy, decode_attention, rms_norm)
+
+Array = jax.Array
+
+
+def _cdtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    proj_out = 2 * d_in + 2 * cfg.ssm_state + nheads
+    return d_in, nheads, conv_dim, proj_out
+
+
+def _n_attn(cfg: ModelConfig) -> int:
+    return -(-cfg.n_layers // cfg.attn_every)   # applications of shared block
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng: Array) -> Dict[str, Any]:
+    d, l = cfg.d_model, cfg.n_layers
+    d_in, nheads, conv_dim, proj_out = _dims(cfg)
+    dt = _pdtype(cfg)
+    ks = jax.random.split(rng, 16)
+
+    # separate projections (z | x | B | C | dt) instead of one fused
+    # in_proj: every output dim is independently sharded over ``model``,
+    # so no slice ever crosses a shard boundary (EXPERIMENTS §Perf A it.3).
+    n = cfg.ssm_state
+    ks2 = jax.random.split(ks[1], 8)
+    blocks = {
+        "norm": jnp.ones((l, d), dt),
+        "z_proj": (jax.random.normal(ks[0], (l, d, d_in))
+                   / math.sqrt(d)).astype(dt),
+        "x_proj": (jax.random.normal(ks2[0], (l, d, d_in))
+                   / math.sqrt(d)).astype(dt),
+        "B_proj": (jax.random.normal(ks2[1], (l, d, n))
+                   / math.sqrt(d)).astype(dt),
+        "C_proj": (jax.random.normal(ks2[2], (l, d, n))
+                   / math.sqrt(d)).astype(dt),
+        "dt_proj": (jax.random.normal(ks2[3], (l, d, nheads))
+                    / math.sqrt(d)).astype(dt),
+        # depthwise causal convs, one per stream (== conv over concat xBC)
+        "conv_wx": (jax.random.normal(ks2[4], (l, cfg.ssm_conv, d_in))
+                    * 0.1).astype(dt),
+        "conv_wB": (jax.random.normal(ks2[5], (l, cfg.ssm_conv, n))
+                    * 0.1).astype(dt),
+        "conv_wC": (jax.random.normal(ks2[6], (l, cfg.ssm_conv, n))
+                    * 0.1).astype(dt),
+        "conv_b": jnp.zeros((l, conv_dim), dt),
+        "A_log": jnp.zeros((l, nheads), dt),
+        "D": jnp.ones((l, nheads), dt),
+        "dt_bias": jnp.zeros((l, nheads), dt),
+        "gate_norm": jnp.ones((l, d_in), dt),
+        "out_proj": (jax.random.normal(ks[2], (l, d_in, d))
+                     / math.sqrt(d_in)).astype(dt),
+    }
+    # shared attention block (one set of weights, reused every attn_every)
+    dh, h, kh, f = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    shared = {
+        "attn_norm": jnp.ones((d,), dt),
+        "wq": (jax.random.normal(ks[3], (d, h * dh)) / math.sqrt(d)).astype(dt),
+        "wk": (jax.random.normal(ks[4], (d, kh * dh)) / math.sqrt(d)).astype(dt),
+        "wv": (jax.random.normal(ks[5], (d, kh * dh)) / math.sqrt(d)).astype(dt),
+        "wo": (jax.random.normal(ks[6], (h * dh, d))
+               / math.sqrt(h * dh)).astype(dt),
+        "mlp_norm": jnp.ones((d,), dt),
+        "w_gate": (jax.random.normal(ks[7], (d, f)) / math.sqrt(d)).astype(dt),
+        "w_up": (jax.random.normal(ks[8], (d, f)) / math.sqrt(d)).astype(dt),
+        "w_down": (jax.random.normal(ks[9], (f, d)) / math.sqrt(f)).astype(dt),
+    }
+    return {
+        "embed": (jax.random.normal(ks[10], (cfg.vocab_size, d)) * 0.02
+                  ).astype(dt),
+        "blocks": blocks,
+        "shared": shared,
+        "final_norm": jnp.ones((d,), dt),
+    }
+
+
+def param_specs(cfg: ModelConfig, mesh) -> Dict[str, Any]:
+    if mesh is None:
+        shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return jax.tree.map(lambda _: P(), shapes)
+    d = cfg.d_model
+    d_in, nheads, conv_dim, proj_out = _dims(cfg)
+    dh, h, kh, f = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+
+    def ls(shape, plan):
+        return shd.logical_spec(mesh, (0, *shape), [None, *plan])
+
+    n = cfg.ssm_state
+    blocks = {
+        "norm": P(None, None),
+        "z_proj": ls((d, d_in), [[("data", "pod")], ["model"]]),
+        "x_proj": ls((d, d_in), [[("data", "pod")], ["model"]]),
+        "B_proj": ls((d, n), [[("data", "pod")], None]),
+        "C_proj": ls((d, n), [[("data", "pod")], None]),
+        "dt_proj": ls((d, nheads), [[("data", "pod")], ["model"]]),
+        "conv_wx": ls((cfg.ssm_conv, d_in), [None, ["model"]]),
+        "conv_wB": P(None, None, None),
+        "conv_wC": P(None, None, None),
+        "conv_b": P(None, None),
+        "A_log": ls((nheads,), [["model"]]),
+        "D": ls((nheads,), [["model"]]),
+        "dt_bias": ls((nheads,), [["model"]]),
+        "gate_norm": ls((d_in,), [["model"]]),
+        "out_proj": ls((d_in, d), [["model"], [("data", "pod")]]),
+    }
+    shared = {
+        "attn_norm": P(None),
+        "wq": shd.logical_spec(mesh, (d, h * dh), [[("data", "pod")], ["model"]]),
+        "wk": shd.logical_spec(mesh, (d, kh * dh), [[("data", "pod")], ["model"]]),
+        "wv": shd.logical_spec(mesh, (d, kh * dh), [[("data", "pod")], ["model"]]),
+        "wo": shd.logical_spec(mesh, (h * dh, d), [["model"], [("data", "pod")]]),
+        "mlp_norm": P(None),
+        "w_gate": shd.logical_spec(mesh, (d, f), [[("data", "pod")], ["model"]]),
+        "w_up": shd.logical_spec(mesh, (d, f), [[("data", "pod")], ["model"]]),
+        "w_down": shd.logical_spec(mesh, (f, d), [["model"], [("data", "pod")]]),
+    }
+    return {
+        "embed": shd.logical_spec(mesh, (cfg.vocab_size, d),
+                                  [["model"], [("data", "pod")]]),
+        "blocks": blocks,
+        "shared": shared,
+        "final_norm": P(None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 mixer
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: Array, w: Array, b: Array, conv_state: Array):
+    """Depthwise causal conv over time.  x: [B, T, C]; w: [K, C]; conv_state:
+    [B, K-1, C] (the last K-1 inputs from the previous segment).
+
+    Returns (y [B, T, C], new_conv_state)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # [B,T+K-1,C]
+    # windowed sum: y[t] = sum_j w[j] * xp[t + j]
+    t = x.shape[1]
+    y = jnp.zeros_like(x)
+    for j in range(k):                    # K is 4: unrolled, fuses fine
+        y = y + xp[:, j:j + t, :] * w[j][None, None, :]
+    new_state = xp[:, t:, :]
+    return y + b[None, None, :], new_state
+
+
+def _ssd_scan(x, dt, a, B, C, state, *, chunk: int = 64):
+    """Mamba2 recurrence, sequential form (paper-faithful baseline).
+
+    x: [B,T,H,dh]; dt/a: [B,T,H]; B/C: [B,T,N]; state: [B,H,dh,N].
+    Returns (y [B,T,H,dh], new state).  State IO is O(T): every token reads
+    and writes the full [B,H,dh,N] state — the measured memory-bound
+    bottleneck of the zamba2 train_4k cell (EXPERIMENTS.md §Perf A)."""
+    t = x.shape[1]
+    c = min(chunk, t)
+    while t % c:
+        c //= 2
+
+    def step(s, inp):
+        xt, dtt, at, Bt, Ct = inp
+        upd = (dtt[..., None] * xt)[..., :, None] * Bt[:, None, None, :]
+        s = at[..., None, None] * s + upd          # [B, H, dh, N]
+        y = jnp.einsum("bhdn,bn->bhd", s, Ct)
+        return s, y
+
+    def chunk_step(s, inp):
+        return jax.lax.scan(step, s, inp)
+
+    def to_chunks(z):
+        zt = jnp.moveaxis(z, 1, 0)
+        return zt.reshape(t // c, c, *zt.shape[1:])
+
+    xs = tuple(to_chunks(z) for z in (x, dt, a, B, C))
+    state, y = jax.lax.scan(jax.checkpoint(chunk_step), state, xs)
+    y = y.reshape(t, *y.shape[2:])
+    return jnp.moveaxis(y, 0, 1), state
+
+
+def _ssd_chunked(x, dt, a, B, C, state, *, chunk: int = 64):
+    """Mamba2 SSD block decomposition (beyond-paper perf variant).
+
+    Same recurrence as :func:`_ssd_scan`, restructured into chunk-local
+    matmuls (the SSD algorithm of the Mamba2 paper, TPU-adapted): with
+    L_t = sum_{tau<=t} log a_tau (log-space, always <= 0 inside a chunk so
+    ratios exp(L_t - L_s) for s<=t never overflow),
+
+        y_t   = C_t . (P_t * S_0)  +  sum_{s<=t} (P_t/P_s) dt_s (C_t.B_s) x_s
+        S_out = P_c * S_0          +  sum_s (P_c/P_s) dt_s  x_s (x) B_s
+
+    State IO drops from per-token to per-chunk (64x) and the inner sums are
+    [c,c]/[c,dh,N] matmuls — MXU work instead of VPU elementwise.
+    """
+    bsz, t, h, dh = x.shape
+    n = B.shape[-1]
+    c = min(chunk, t)
+    while t % c:
+        c //= 2
+
+    def to_chunks(z):
+        zt = jnp.moveaxis(z, 1, 0)
+        return zt.reshape(t // c, c, *zt.shape[1:])
+
+    def chunk_step(s, inp):
+        xc, dtc, ac, Bc, Cc = inp           # [c,B,H,dh], [c,B,H], [c,B,N]
+        # inclusive log-decay prefix within the chunk: [c, B, H]
+        logp = jnp.cumsum(jnp.log(jnp.maximum(ac, 1e-37)), axis=0)
+        p_incl = jnp.exp(logp)
+        # inter-chunk: y_inter[t] = P_t * (C_t . S_0)
+        y_inter = jnp.einsum("cbn,bhdn->cbhd", Cc, s) \
+            * p_incl[..., None]
+        # intra-chunk: scores[t,s] = (C_t.B_s) * exp(L_t - L_s) * dt_s, s<=t
+        ratio = jnp.exp(logp[:, None] - logp[None, :])      # [c,c,B,H]
+        mask = jnp.tril(jnp.ones((c, c), bool))[:, :, None, None]
+        cb = jnp.einsum("cbn,sbn->csb", Cc, Bc)             # [c,s,B]
+        scores = jnp.where(mask, cb[..., None] * ratio * dtc[None], 0.0)
+        y_intra = jnp.einsum("csbh,sbhd->cbhd", scores, xc)
+        # state update: S = P_c*S_0 + sum_s (P_c/P_s) dt_s x_s (x) B_s
+        wgt = jnp.exp(logp[-1][None] - logp) * dtc          # [c,B,H]
+        s = s * p_incl[-1][..., None, None] \
+            + jnp.einsum("cbhd,cbn->bhdn", xc * wgt[..., None], Bc)
+        return s, y_inter + y_intra
+
+    xs = tuple(to_chunks(z) for z in (x, dt, a, B, C))
+    state, y = jax.lax.scan(jax.checkpoint(chunk_step), state, xs)
+    y = y.reshape(t, bsz, h, dh)
+    return jnp.moveaxis(y, 0, 1), state
+
+
+def _mamba_block(cfg, lp, h, ssm_state, conv_state):
+    cd = _cdtype(cfg)
+    b, t, d = h.shape
+    d_in, nheads, conv_dim, _ = _dims(cfg)
+    hd, n = cfg.ssm_head_dim, cfg.ssm_state
+    x = rms_norm(h, lp["norm"]).astype(cd)
+    z = x @ lp["z_proj"].astype(cd)
+    xm = x @ lp["x_proj"].astype(cd)
+    Bm_r = x @ lp["B_proj"].astype(cd)
+    Cm_r = x @ lp["C_proj"].astype(cd)
+    dt_raw = x @ lp["dt_proj"].astype(cd)
+    # depthwise causal convs per stream (== one conv over concat(x, B, C));
+    # conv_state layout stays [B, K-1, d_in + 2N]
+    cs_x = conv_state[..., :d_in]
+    cs_B = conv_state[..., d_in:d_in + n]
+    cs_C = conv_state[..., d_in + n:]
+    cb = lp["conv_b"].astype(cd)
+    xs_c, ns_x = _causal_conv(xm, lp["conv_wx"].astype(cd),
+                              cb[:d_in], cs_x)
+    Bm_c, ns_B = _causal_conv(Bm_r, lp["conv_wB"].astype(cd),
+                              cb[d_in:d_in + n], cs_B)
+    Cm_c, ns_C = _causal_conv(Cm_r, lp["conv_wC"].astype(cd),
+                              cb[d_in + n:], cs_C)
+    conv_state = jnp.concatenate([ns_x, ns_B, ns_C], axis=-1
+                                 ).astype(conv_state.dtype)
+    xs = jax.nn.silu(xs_c)
+    Bm = jax.nn.silu(Bm_c).astype(jnp.float32)
+    Cm = jax.nn.silu(Cm_c).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-dt * jnp.exp(lp["A_log"].astype(jnp.float32)))
+    ssd = _ssd_chunked if (cfg.ssm_mode == "chunked" and t > 1) else _ssd_scan
+    y, ssm_state = ssd(
+        xs.reshape(b, t, nheads, hd).astype(jnp.float32), dt, a, Bm, Cm,
+        ssm_state)
+    y = y + lp["D"].astype(jnp.float32)[None, None, :, None] \
+        * xs.reshape(b, t, nheads, hd).astype(jnp.float32)
+    y = y.reshape(b, t, d_in)
+    y = rms_norm(y, lp["gate_norm"]) * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(cd) @ lp["out_proj"].astype(cd)
+    return h + out.astype(h.dtype), ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block
+# ---------------------------------------------------------------------------
+
+def _shared_attn(cfg, sp, h, positions, mesh, kv_override=None):
+    cd = _cdtype(cfg)
+    b, s, d = h.shape
+    dh, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    x = rms_norm(h, sp["attn_norm"]).astype(cd)
+    q = (x @ sp["wq"].astype(cd)).reshape(b, s, nh, dh)
+    k = (x @ sp["wk"].astype(cd)).reshape(b, s, nkv, dh)
+    v = (x @ sp["wv"].astype(cd)).reshape(b, s, nkv, dh)
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    if kv_override is not None:
+        k_cache, v_cache, clen = kv_override
+        # mask-select update (partition-friendly; see transformer._attn)
+        smax = k_cache.shape[1]
+        wmask = (jnp.arange(smax)[None, :] == clen[:, None])[..., None, None]
+        k_cache = jnp.where(wmask, k[:, 0][:, None].astype(k_cache.dtype),
+                            k_cache)
+        v_cache = jnp.where(wmask, v[:, 0][:, None].astype(v_cache.dtype),
+                            v_cache)
+        o = decode_attention(q, k_cache.astype(cd), v_cache.astype(cd),
+                             clen + 1)
+        kv = (k_cache, v_cache)
+    else:
+        qc, kc = min(cfg.q_chunk, s), min(cfg.kv_chunk, s)
+        while s % qc:
+            qc //= 2
+        while s % kc:
+            kc //= 2
+        o = blocked_causal_attention(q, k, v, q_chunk=qc, kv_chunk=kc,
+                                     mesh=mesh)
+        kv = (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+    o = o.reshape(b, s, nh * dh)
+    h = h + (o @ sp["wo"].astype(cd)).astype(h.dtype)
+    x = rms_norm(h, sp["mlp_norm"]).astype(cd)
+    g = jax.nn.silu(x @ sp["w_gate"].astype(cd)) * (x @ sp["w_up"].astype(cd))
+    return h + (g @ sp["w_down"].astype(cd)).astype(h.dtype), kv
+
+
+# ---------------------------------------------------------------------------
+# Bundle
+# ---------------------------------------------------------------------------
+
+@register_family("zamba2")
+def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
+    d = cfg.d_model
+    d_in, nheads, conv_dim, _ = _dims(cfg)
+    hd, n = cfg.ssm_head_dim, cfg.ssm_state
+    n_attn = _n_attn(cfg)
+    remat_policy = jax.checkpoint_policies.nothing_saveable
+
+    def init(rng):
+        return init_params(cfg, rng)
+
+    def _zero_ssm(b):
+        return (jnp.zeros((cfg.n_layers, b, nheads, hd, n), jnp.float32),
+                jnp.zeros((cfg.n_layers, b, cfg.ssm_conv - 1, conv_dim),
+                          jnp.float32))
+
+    ae = cfg.attn_every
+    group_bounds = [(g * ae, min((g + 1) * ae, cfg.n_layers))
+                    for g in range(n_attn)]
+
+    def _slice_blocks(params, a, b):
+        return jax.tree.map(lambda x: x[a:b], params["blocks"])
+
+    def _forward(params, batch, ssm_states, attn_hook):
+        """Static group structure: [shared-attn, mamba x attn_every] x n_attn.
+
+        ``attn_hook(h, g) -> h`` runs the shared block for group g.  Groups
+        are unrolled in Python (n_attn is small); the mamba layers inside a
+        group run under a remat'd scan.  This keeps the HLO free of
+        lax.cond (exact dry-run cost accounting) and matches Zamba2's fixed
+        shared-block positions.
+        """
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = jnp.take(params["embed"], tokens, axis=0).astype(_cdtype(cfg))
+        if mesh is not None and s > 1:
+            h = shd.with_channel_sharding(mesh, h)
+        ssm_s, conv_s = ssm_states
+        ssm_out, conv_out = [], []
+
+        def body(h, xs):
+            lp, s_s, c_s = xs
+            h, s_s, c_s = _mamba_block(cfg, lp, h, s_s, c_s)
+            if mesh is not None and s > 1:
+                h = shd.with_channel_sharding(mesh, h)
+            return h, (s_s, c_s)
+
+        body_fn = (jax.checkpoint(body, policy=remat_policy)
+                   if cfg.remat else body)
+        for g, (a, bnd) in enumerate(group_bounds):
+            h = attn_hook(h, g)
+            h, (s_o, c_o) = jax.lax.scan(
+                body_fn, h, (_slice_blocks(params, a, bnd),
+                             ssm_s[a:bnd], conv_s[a:bnd]))
+            ssm_out.append(s_o)
+            conv_out.append(c_o)
+        h = rms_norm(h, params["final_norm"])
+        return h, (jnp.concatenate(ssm_out), jnp.concatenate(conv_out))
+
+    def train_loss(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def attn_hook(h, g):
+            h2, _ = _shared_attn(cfg, params["shared"], h, positions, mesh)
+            return h2
+
+        h, _ = _forward(params, batch, _zero_ssm(b), attn_hook)
+        labels, mask = causal_lm_labels(tokens)
+        return chunked_cross_entropy(h, params["embed"], labels,
+                                     chunk=min(cfg.loss_chunk, s), mask=mask)
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        kv_parts = []
+
+        def attn_hook(h, g):
+            h2, (k, v) = _shared_attn(cfg, params["shared"], h, positions,
+                                      mesh)
+            kv_parts.append((k, v))
+            return h2
+
+        h, (ssm_s, conv_s) = _forward(params, batch, _zero_ssm(b), attn_hook)
+        ks = jnp.stack([k for k, _ in kv_parts])
+        vs = jnp.stack([v for _, v in kv_parts])
+        logits = (h[:, -1].astype(jnp.float32)
+                  @ params["embed"].astype(jnp.float32).T)
+        return logits, {"ssm": ssm_s, "conv": conv_s, "k": ks, "v": vs}
+
+    def init_cache(batch_size, max_len):
+        ssm_s, conv_s = _zero_ssm(batch_size)
+        kv_shape = (n_attn, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"ssm": ssm_s, "conv": conv_s,
+                "k": jnp.zeros(kv_shape, jnp.bfloat16),
+                "v": jnp.zeros(kv_shape, jnp.bfloat16)}
+
+    def decode_step(params, batch, cache):
+        tokens, clen = batch["tokens"], batch["cache_len"]
+        b = tokens.shape[0]
+        positions = clen[:, None]
+        h = jnp.take(params["embed"], tokens, axis=0).astype(_cdtype(cfg))
+        ssm_s, conv_s = cache["ssm"], cache["conv"]
+        ssm_out, conv_out, kv_out = [], [], []
+
+        def body(h, xs):
+            lp, s_s, c_s = xs
+            h, s_s, c_s = _mamba_block(cfg, lp, h, s_s, c_s)
+            return h, (s_s, c_s)
+
+        for g, (a, bnd) in enumerate(group_bounds):
+            h, (kc, vc) = _shared_attn(
+                cfg, params["shared"], h, positions, mesh,
+                kv_override=(cache["k"][g], cache["v"][g], clen))
+            kv_out.append((kc, vc))
+            h, (s_o, c_o) = jax.lax.scan(
+                body, h, (_slice_blocks(params, a, bnd),
+                          ssm_s[a:bnd], conv_s[a:bnd]))
+            ssm_out.append(s_o)
+            conv_out.append(c_o)
+        h = rms_norm(h, params["final_norm"])
+        logits = (h[:, -1].astype(jnp.float32)
+                  @ params["embed"].astype(jnp.float32).T)
+        return logits, {"ssm": jnp.concatenate(ssm_out),
+                        "conv": jnp.concatenate(conv_out),
+                        "k": jnp.stack([k for k, _ in kv_out]),
+                        "v": jnp.stack([v for _, v in kv_out])}
+
+    def specs():
+        return param_specs(cfg, mesh)
+
+    def cache_specs(batch_size):
+        if mesh is None:
+            return {"ssm": P(), "conv": P(), "k": P(), "v": P()}
+        dp = shd.shard_batch(mesh, batch_size)
+        hsp = shd.dim_spec(mesh, nheads, "model")
+        # KV cache: batch over dp, sequence over model (always divisible in
+        # the assigned decode shapes)
+        return {"ssm": P(None, dp, hsp, None, None),
+                "conv": P(None, dp, None, None),
+                "k": P(None, dp, "model", None, None),
+                "v": P(None, dp, "model", None, None)}
+
+    return ModelBundle(cfg=cfg, init=init, train_loss=train_loss,
+                       prefill=prefill, decode_step=decode_step,
+                       init_cache=init_cache, param_specs=specs,
+                       cache_specs=cache_specs)

@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, apply_masks
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "apply_masks"]

@@ -1,0 +1,108 @@
+"""AdamW as pure functions over pytrees (no optax in this container).
+
+Supports the Sense co-design's *mask-preserving* update: after each step,
+pruning masks are re-applied so retraining never resurrects pruned weights
+(the paper's prune -> retrain loop, Fig.5).
+
+``adamw_update`` optionally takes a gradient transform hook (used by
+``distributed.compress`` for error-feedback compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    """Linear warmup + cosine decay (production default)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 \
+        * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, *,
+                 grad_transform: Callable | None = None):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    if grad_transform is not None:
+        grads, state = grad_transform(grads, state)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        new_p = p.astype(jnp.float32) - lr * (
+            mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def apply_masks(params, masks):
+    """Re-apply pruning masks after an update (mask-preserving retraining).
+
+    ``masks`` mirrors a subset of the params tree; missing entries pass
+    through unmasked."""
+    if masks is None:
+        return params
+
+    def walk(p, m):
+        if m is None:
+            return p
+        if isinstance(p, dict):
+            return {k: walk(p[k], m.get(k)) if isinstance(m, dict) else p[k]
+                    for k in p}
+        return p * m
+    return walk(params, masks)

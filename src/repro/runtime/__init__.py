@@ -1,0 +1,3 @@
+from .trainer import Trainer, TrainerConfig, TransientError
+
+__all__ = ["Trainer", "TrainerConfig", "TransientError"]

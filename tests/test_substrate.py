@@ -1,0 +1,244 @@
+"""Substrate tests: checkpoint atomicity/CRC/resume, trainer fault
+tolerance, gradient compression, optimizer, data pipeline determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import DataConfig, SyntheticLMData
+from repro.distributed import compress
+from repro.optim import AdamWConfig, adamw_init, adamw_update, apply_masks
+from repro.runtime import Trainer, TrainerConfig, TransientError
+
+
+def tiny_tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {"a": jnp.asarray(r.standard_normal((4, 3)), jnp.float32),
+            "b": {"c": jnp.asarray(r.standard_normal(7), jnp.float32),
+                  "d": jnp.asarray(r.integers(0, 9, 5), jnp.int32)}}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = tiny_tree()
+    save_checkpoint(tmp_path, 7, tree, extra={"note": "x"})
+    assert latest_step(tmp_path) == 7
+    out, extra = restore_checkpoint(tmp_path, 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    assert extra == {"note": "x"}
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    tree = tiny_tree()
+    save_checkpoint(tmp_path, 1, tree)
+    d = tmp_path / "step_00000001"
+    victim = next(f for f in d.iterdir() if f.suffix == ".npy")
+    arr = np.load(victim)
+    arr = np.asarray(arr).copy()
+    flat = arr.reshape(-1)
+    flat[0] = flat[0] + 1 if arr.dtype.kind in "iu" else flat[0] + 1.0
+    np.save(victim, arr)
+    with pytest.raises(IOError):
+        restore_checkpoint(tmp_path, 1, tree)
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    tree = tiny_tree()
+    save_checkpoint(tmp_path, 5, tree)
+    # a straggling .tmp dir (crash mid-write) must not be visible
+    (tmp_path / "step_00000009.tmp").mkdir()
+    assert latest_step(tmp_path) == 5
+
+
+def test_checkpoint_gc_keeps_n(tmp_path):
+    tree = tiny_tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    steps = sorted(d.name for d in tmp_path.iterdir())
+    assert steps == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_reshard_on_load(tmp_path):
+    """Restore with explicit shardings (elastic restart path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = tiny_tree()
+    save_checkpoint(tmp_path, 3, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+    out, _ = restore_checkpoint(tmp_path, 3, tree, shardings=sh)
+    assert all(x.sharding == NamedSharding(mesh, P())
+               for x in jax.tree.leaves(out))
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0, grad_clip=0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(cfg, params, g, state)
+    assert float(loss(params)) < 0.05
+
+
+def test_apply_masks_preserves_zeros():
+    params = {"w": jnp.ones((2, 4)), "b": jnp.ones(3)}
+    masks = {"w": jnp.asarray([[1, 0, 1, 0], [0, 1, 0, 1]], jnp.float32)}
+    out = apply_masks(params, masks)
+    assert float(jnp.sum(out["w"] != 0)) == 4
+    np.testing.assert_allclose(np.asarray(out["b"]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_int8_quantization_error_bound():
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.standard_normal(1000) * 5, jnp.float32)
+    q, s = compress.quantize_int8(x, block=256)
+    deq = compress.dequantize_int8(q, s, x.shape, jnp.float32)
+    blocks = np.pad(np.asarray(x), (0, (-x.size) % 256)).reshape(-1, 256)
+    bound = np.abs(blocks).max(axis=1) / 127 * 0.5 + 1e-7
+    err = np.abs(np.pad(np.asarray(x - deq), (0, (-x.size) % 256))
+                 ).reshape(-1, 256)
+    assert (err <= bound[:, None] + 1e-6).all()
+
+
+def test_error_feedback_tracks_true_sum():
+    """sum of compressed grads + final residual == sum of true grads."""
+    r = np.random.default_rng(1)
+    grads = [jnp.asarray(r.standard_normal((8, 8)), jnp.float32)
+             for _ in range(10)]
+    res = {"g": jnp.zeros((8, 8), jnp.float32)}
+    total_comp = np.zeros((8, 8), np.float32)
+    for g in grads:
+        out, res = compress.compress_tree({"g": g}, res)
+        total_comp += np.asarray(out["g"])
+    total_true = np.sum([np.asarray(g) for g in grads], axis=0)
+    np.testing.assert_allclose(total_comp + np.asarray(res["g"]),
+                               total_true, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=64, seq_len=16, global_batch=4, seed=3)
+    d1, d2 = SyntheticLMData(cfg), SyntheticLMData(cfg)
+    np.testing.assert_array_equal(np.asarray(d1.batch_at(5)["tokens"]),
+                                  np.asarray(d2.batch_at(5)["tokens"]))
+    # host sharding partitions the global batch
+    full = np.asarray(d1.batch_at(2)["tokens"])
+    h0 = np.asarray(d1.batch_at(2, host_id=0, n_hosts=2)["tokens"])
+    h1 = np.asarray(d1.batch_at(2, host_id=1, n_hosts=2)["tokens"])
+    np.testing.assert_array_equal(np.concatenate([h0, h1]), full)
+    # state round trip
+    d1.step = 17
+    d2.load_state_dict(d1.state_dict())
+    assert d2.step == 17
+
+
+# ---------------------------------------------------------------------------
+# trainer fault tolerance
+# ---------------------------------------------------------------------------
+
+def _make_trainer(tmp_path, steps=12, every=5, opt_total=None, **kw):
+    cfg = DataConfig(vocab_size=32, seq_len=8, global_batch=4)
+    data = SyntheticLMData(cfg)
+    params = {"emb": jnp.asarray(
+        np.random.default_rng(0).standard_normal((32, 16)) * 0.1,
+        jnp.float32)}
+
+    def loss_fn(p, batch):
+        h = p["emb"][batch["tokens"][:, :-1]]
+        logits = h @ p["emb"].T
+        labels = batch["tokens"][:, 1:]
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        return jnp.mean(lse - gold)
+
+    return Trainer(loss_fn=loss_fn, params=params, data=data,
+                   opt_cfg=AdamWConfig(lr=1e-2, warmup_steps=0,
+                                       total_steps=opt_total or steps),
+                   cfg=TrainerConfig(total_steps=steps,
+                                     checkpoint_every=every,
+                                     checkpoint_dir=str(tmp_path),
+                                     log_every=1, **kw))
+
+
+def test_trainer_loss_decreases(tmp_path):
+    t = _make_trainer(tmp_path, steps=30)
+    res = t.run()
+    assert res["status"] == "done"
+    losses = [m["loss"] for m in t.metrics_log]
+    assert losses[-1] < losses[0]
+
+
+def test_trainer_resume_bit_exact(tmp_path):
+    """Interrupted-at-10 + resume == uninterrupted, bit-exact params."""
+    t1 = _make_trainer(tmp_path / "a", steps=10, every=10, opt_total=20)
+    t1.run()
+    t2 = _make_trainer(tmp_path / "a", steps=20, every=10)
+    assert t2.resume() and t2.step == 10
+    t2.run()
+    t3 = _make_trainer(tmp_path / "b", steps=20, every=50)
+    t3.run()
+    np.testing.assert_array_equal(np.asarray(t2.params["emb"]),
+                                  np.asarray(t3.params["emb"]))
+
+
+def test_trainer_preemption_checkpoints(tmp_path):
+    t = _make_trainer(tmp_path, steps=50, every=100)
+
+    def hook(step):
+        if step == 7:
+            t.preempted = True
+    res = t.run(fault_hook=hook)
+    assert res["status"] == "preempted"
+    assert latest_step(tmp_path) == res["step"]
+
+
+def test_trainer_transient_fault_retries(tmp_path):
+    t = _make_trainer(tmp_path, steps=6, every=100)
+    fails = {"n": 0}
+
+    def hook(step):
+        if step == 3 and fails["n"] < 2:
+            fails["n"] += 1
+            raise TransientError("injected")
+    res = t.run(fault_hook=hook)
+    assert res["status"] == "done" and fails["n"] == 2
+
+
+def test_trainer_straggler_detection(tmp_path):
+    import time
+    t = _make_trainer(tmp_path, steps=6, every=100,
+                      step_deadline_s=0.05)
+
+    def hook(step):
+        if step == 2:
+            time.sleep(0.2)
+    res = t.run(fault_hook=hook)
+    assert 2 in t.straggler_steps
+
+
+def test_trainer_grad_compression_still_converges(tmp_path):
+    t = _make_trainer(tmp_path, steps=30, grad_compression=True)
+    t.run()
+    losses = [m["loss"] for m in t.metrics_log]
+    assert losses[-1] < losses[0]
