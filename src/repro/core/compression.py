@@ -68,6 +68,29 @@ def compression_ratio(numel: int, nnz: int, *, elem_bits: int = 16) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Balanced-format storage (flat vs tile-local) — feeds the DRAM model
+# ---------------------------------------------------------------------------
+
+def balanced_flat_bits(n_out: int, k: int, n_in: int, *,
+                       elem_bits: int = 16) -> int:
+    """Storage of the flat balanced format ``(values[O,K], indices[O,K])``:
+    every index addresses the full input dimension (``ceil(log2 N)`` bits)."""
+    idx_bits = max(1, (max(n_in, 2) - 1).bit_length())
+    return n_out * k * (elem_bits + idx_bits)
+
+
+def balanced_tiled_bits(n_out: int, nb: int, kb: int, bn: int, *,
+                        elem_bits: int = 16, count_bits: int = 16) -> int:
+    """Storage of the tile-local balanced format ``[O, NB, KB]`` blocks:
+    block-local indices need only ``ceil(log2 bn)`` bits, plus a per-block
+    count word.  At balanced K the KB padding slack is small, so the format
+    usually *undercuts* the flat one despite the padding — quantified per
+    weight by `kernels.tile_format.tiled_storage_bits`."""
+    idx_bits = max(1, (max(bn, 2) - 1).bit_length())
+    return n_out * nb * (kb * (elem_bits + idx_bits) + count_bits)
+
+
+# ---------------------------------------------------------------------------
 # Static-shape (jit-safe) codecs — the VMEM-tile view
 # ---------------------------------------------------------------------------
 

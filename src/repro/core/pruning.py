@@ -134,6 +134,25 @@ class BalancedSparse:
         rows = jnp.arange(self.n_out)[:, None]
         return dense.at[rows, self.indices].set(self.values)
 
+    def to_tiled(self, *, bn: int = 128, kb: int | None = None):
+        """Convert to the kernel-native tile-local format
+        (`kernels.tile_format.TiledBalanced`): nonzeros re-partitioned by
+        ``bn``-wide input-column blocks with block-local indices.  Balanced
+        pruning keeps per-block counts concentrated at K*bn/N, so the
+        static capacity ``kb`` (measured when not given) stays close to the
+        mean — the co-design invariant carried down to the tile level."""
+        from ..kernels.tile_format import encode_tiled
+        return encode_tiled(self.values, self.indices, self.n_in,
+                            bn=bn, kb=kb)
+
+    def block_keep_counts(self, *, bn: int = 128) -> Array:
+        """Per-(row, bn-block) NZE counts — the tile-level balance profile
+        (feed `load_imbalance` to quantify it)."""
+        nb = -(-self.n_in // bn)
+        blk = self.indices // bn
+        rows = jnp.arange(self.n_out)[:, None]
+        return jnp.zeros((self.n_out, nb), jnp.int32).at[rows, blk].add(1)
+
     def tree_flatten(self):
         return (self.values, self.indices), (self.n_in,)
 

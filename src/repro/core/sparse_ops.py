@@ -34,10 +34,17 @@ class SparseLinearSpec:
                 or self.ifm_sparsity >= IFM_SPARSE_THRESHOLD)
 
 
-def sparse_matmul(x: Array, sp: BalancedSparse, *, impl: str = "pallas") -> Array:
-    """y = x @ W.T with W in the balanced format."""
+def sparse_matmul(x: Array, sp: BalancedSparse, *, impl: str = "pallas",
+                  block_k: int | None = None) -> Array:
+    """y = x @ W.T with W in the balanced format.
+
+    ``block_k`` pins the tile-local format's static per-block capacity for
+    the Pallas path — pass it when tracing with a known pruning pattern
+    (e.g. measured from the concrete mask) to avoid the conservative
+    min(K, bn) bound.
+    """
     return kernel_ops.balanced_spmm(x, sp.values, sp.indices, n_in=sp.n_in,
-                                    impl=impl)
+                                    impl=impl, block_k=block_k)
 
 
 def mode_switched_matmul(x: Array, w_dense: Array, spec: SparseLinearSpec, *,
@@ -53,10 +60,10 @@ def mode_switched_matmul(x: Array, w_dense: Array, spec: SparseLinearSpec, *,
 
 def sparse_conv2d(x: Array, sp: BalancedSparse, *, hk: int, wk: int,
                   stride: int = 1, padding: str | int = "SAME",
-                  impl: str = "pallas") -> Array:
-    """Balanced-sparse convolution (im2col + Pallas GEMM)."""
+                  impl: str = "pallas", block_k: int | None = None) -> Array:
+    """Balanced-sparse convolution (chunked im2col + Pallas GEMM)."""
     def matmul_fn(flat, values, indices, n_in):
         return kernel_ops.balanced_spmm(flat, values, indices, n_in=n_in,
-                                        impl=impl)
+                                        impl=impl, block_k=block_k)
     return _sparse_conv2d(x, sp.values, sp.indices, sp.n_in, hk=hk, wk=wk,
                           stride=stride, padding=padding, matmul_fn=matmul_fn)

@@ -143,22 +143,19 @@ def conv_cycles_sliced(nzei_tiles: np.ndarray, nzew_slices: np.ndarray, *,
             [nzew_slices, np.zeros((pad_o, nzew_slices.shape[1]), np.int64)])
     ci_p, co_p = nzei_tiles.shape[0], nzew_slices.shape[0]
     gi, go = ci_p // n_pe, co_p // n_pe
-    # lane view: channel (e, r) -> IC e*n_pe + r
+    # lane view: channel (e, r) -> IC e*n_pe + r; OC groups batched on a
+    # leading G axis — one einsum over all output groups (this function
+    # dominates benchmarks/paper_figs.py runtime, so no Python group loop).
     nzei_l = nzei_tiles.reshape(gi, n_pe, t)            # [E, r, T]
-    w_l = nzew_slices.reshape(co_p, gi, n_pe)           # [C_o, E, r]
-    total = 0
-    for g in range(go):
-        w_g = w_l[g * n_pe:(g + 1) * n_pe]              # [c, E, r]
-        if sync == "block":
-            # lane[c, r, T] = sum_e w_g[c,e,r] * nzei_l[e,r,T]
-            lane = np.einsum("cer,ert->crt", w_g, nzei_l)
-            total += int(lane.max(axis=(0, 1)).sum())   # max over lanes, sum T
-        else:
-            # step[e, t] = max_{c, r} w_g[c,e,r] * nzei_l[e,r,t]
-            w_max = w_g.max(axis=0)                     # [E, r]
-            step = (w_max[..., None] * nzei_l).max(axis=1)   # [E, T]
-            total += int(step.sum())
-    return total
+    w_g = nzew_slices.reshape(go, n_pe, gi, n_pe)       # [G, c, E, r]
+    if sync == "block":
+        # lane[g, c, r, T] = sum_e w_g[g,c,e,r] * nzei_l[e,r,T]
+        lane = np.einsum("gcer,ert->gcrt", w_g, nzei_l)
+        return int(lane.max(axis=(1, 2)).sum())         # max lanes, sum G x T
+    # step[g, e, t] = max_{c, r} w_g[g,c,e,r] * nzei_l[e,r,t]
+    w_max = w_g.max(axis=1)                             # [G, E, r]
+    step = (w_max[..., None] * nzei_l[None]).max(axis=2)     # [G, E, T]
+    return int(step.sum())
 
 
 def fc_cycles(input_mask: np.ndarray, nzew_cols: np.ndarray, *, n_pe: int,

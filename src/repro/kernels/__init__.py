@@ -1,17 +1,23 @@
 """Pallas TPU kernels for Sense's compute hot-spots.
 
-- balanced_spmm: K-per-row balanced sparse x dense GEMM (the load-balanced
-  pruning contract turned into a static-shape TPU kernel)
+- tile_format:   tile-local balanced weight format (per-bn-block values +
+  block-local indices + counts) — the encoding the kernels consume
+- balanced_spmm: K-per-row balanced sparse x dense GEMM as a grid-(M, O,
+  N/bn) decode-and-matmul kernel (scatter one [bo, bn] dense tile in VMEM,
+  accumulate a rank-2 MXU dot)
 - bitmap_spmm:   bitmap-decode -> dense VMEM tile -> MXU matmul (the paper's
   compression format, tile-granular on TPU)
-- sparse_conv:   im2col + balanced GEMM for CONV layers
+- sparse_conv:   chunked im2col + balanced GEMM for CONV layers
 
-ops.py holds the jit'd public wrappers (padding, custom_vjp, XLA fallback);
-ref.py holds the pure-jnp oracles every kernel is validated against.
+ops.py holds the jit'd public wrappers (padding, block autotuning, encoding
+cache, custom_vjp, XLA fallbacks); ref.py holds the pure-jnp oracles every
+kernel is validated against.
 """
 from . import ops, ref
-from .ops import balanced_spmm, bitmap_spmm, encode_bitmap
+from .ops import balanced_spmm, bitmap_spmm, choose_blocks, encode_bitmap
 from .sparse_conv import im2col, sparse_conv2d
+from .tile_format import TiledBalanced, encode_tiled, tiled_to_dense
 
 __all__ = ["ops", "ref", "balanced_spmm", "bitmap_spmm", "encode_bitmap",
-           "im2col", "sparse_conv2d"]
+           "choose_blocks", "im2col", "sparse_conv2d", "TiledBalanced",
+           "encode_tiled", "tiled_to_dense"]

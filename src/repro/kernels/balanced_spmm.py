@@ -1,77 +1,81 @@
-"""Pallas TPU kernel: balanced sparse x dense matmul (y = x @ W.T).
+"""Pallas TPU kernel: balanced sparse x dense matmul (y = x @ W.T), MXU-native.
 
-W is the Sense balanced-sparse format — exactly K nonzeros per output row,
-``(values[O, K], indices[O, K])``.  Load balance is what makes this kernel
-possible with *static* shapes: every row-tile gathers the same K columns'
-worth of work, so there is no padding waste and no per-row control flow —
-the TPU-native restatement of the paper's equal-NZE-per-PE-column invariant
-(DESIGN.md §3).
+W is the *tile-local* balanced format (`tile_format.TiledBalanced`): each
+output row's nonzeros are pre-partitioned by ``bn``-wide column blocks of the
+input dimension, with block-local indices.  Load balance is what makes the
+kernel possible with static shapes — balanced pruning pins the per-row total
+K and concentrates per-block counts near K/NB, so every grid step does the
+same amount of decode work with no per-row control flow (the TPU-native
+restatement of the paper's equal-NZE-per-PE-column invariant, DESIGN.md §3).
 
-Tiling: grid over (M/bm, O/bo); the x block [bm, N] stays resident in VMEM
-while the kernel walks the K dimension in ``bk`` chunks (weight-stationary
-within a tile, input-stationary across the O grid — the RIF-flavored order;
-`ops.balanced_spmm` can transpose the grid for the RWF-flavored order per
-the Adaptive Dataflow Configuration).
+Grid ``(M/bm, O/bo, NB)``: each step scatter-decodes one weight block
+``(values[bo, KB], local_idx[bo, KB]) -> w_tile[bo, bn]`` in VMEM — padded
+slots carry value 0 / index 0, so the scatter needs no masking — then
+accumulates a rank-2 ``jnp.dot(x_tile[bm, bn], w_tile.T)`` on the MXU.  This
+is the column-combining move (Kung et al.): sparse columns packed into dense
+tiles the array consumes at full utilization.  The previous kernel gathered a
+rank-3 ``[bm, bo, bk]`` buffer (8 MiB VMEM at defaults) and reduced it with a
+VPU einsum over an ``nsteps`` serial fori_loop; both are gone.
 
-VMEM budget per step (f32): bm*N (x) + 2*bo*K (vals+idx) + bm*bo*bk (gather
-buffer) + bm*bo (acc).  Defaults bm=bo=128, bk=128 keep the gather buffer at
-8 MiB f32 upper bound; shrink bk for large tiles.
+VMEM per step (f32): bm*bn (x) + bo*KB*2 (vals+idx) + bo*bn (decoded tile)
++ bm*bo (acc) — at bm=bo=bn=128, KB=64: ~0.26 MiB vs the old 8 MiB.
+`ops.choose_blocks` picks bm/bo/bn from shapes and a VMEM budget.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tile_format import TiledBalanced
+
 Array = jax.Array
 
 
-def _kernel(x_ref, v_ref, i_ref, o_ref, *, bk: int):
-    """One (m, o) output tile: acc[m, o] = sum_j x[m, idx[o, j]] * v[o, j]."""
-    x = x_ref[...]                      # [bm, N]
-    vals = v_ref[...]                   # [bo, K]
-    idx = i_ref[...]                    # [bo, K] int32
-    bm = x.shape[0]
+def _kernel(x_ref, v_ref, i_ref, o_ref):
+    """One (m, o, nb) step: o_ref += x[bm, bn] @ decode(W block)[bn, bo]."""
+    nb = pl.program_id(2)
+
+    @pl.when(nb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                    # [bm, bn]
+    vals = v_ref[...].reshape(v_ref.shape[0], v_ref.shape[2])   # [bo, KB]
+    idx = i_ref[...].reshape(i_ref.shape[0], i_ref.shape[2])    # [bo, KB]
+    bn = x.shape[1]
     bo = vals.shape[0]
-    k = vals.shape[1]
-    nsteps = k // bk
-
-    def body(step, acc):
-        start = step * bk
-        idx_c = jax.lax.dynamic_slice_in_dim(idx, start, bk, axis=1)
-        val_c = jax.lax.dynamic_slice_in_dim(vals, start, bk, axis=1)
-        # gather the K-chunk's input columns: [bm, bo, bk]
-        xg = jnp.take(x, idx_c, axis=1)
-        return acc + jnp.einsum("mok,ok->mo", xg, val_c,
-                                preferred_element_type=jnp.float32)
-
-    acc = jnp.zeros((bm, bo), jnp.float32)
-    acc = jax.lax.fori_loop(0, nsteps, body, acc)
-    o_ref[...] = acc.astype(o_ref.dtype)
+    # scatter-decode the block to a dense [bo, bn] VMEM tile; zero-padded
+    # slots (val 0, idx 0) are no-ops under add, duplicates cannot occur
+    # among real entries (indices are distinct within a block).
+    rows = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 0)
+    w_tile = jnp.zeros((bo, bn), jnp.float32).at[rows, idx].add(
+        vals.astype(jnp.float32))
+    o_ref[...] += jnp.dot(x, w_tile.T, preferred_element_type=jnp.float32)
 
 
-def balanced_spmm_pallas(x: Array, values: Array, indices: Array, *,
-                         bm: int = 128, bo: int = 128, bk: int = 128,
-                         interpret: bool = True) -> Array:
+def tiled_balanced_spmm_pallas(x: Array, tb: TiledBalanced, *, bm: int = 128,
+                               bo: int = 128,
+                               interpret: bool = True) -> Array:
     """Raw pallas_call; shapes must already be tile-aligned (see ops.py).
 
-    x: [M, N]; values/indices: [O, K] with M % bm == O % bo == K % bk == 0.
+    x: [M, NB*bn]; tb.values/indices: [O, NB, KB] with M % bm == O % bo == 0.
+    Returns f32 [M, O] (accumulator dtype; caller casts).
     """
     m, n = x.shape
-    o, k = values.shape
-    assert m % bm == 0 and o % bo == 0 and k % bk == 0, (m, o, k, bm, bo, bk)
-    grid = (m // bm, o // bo)
+    o, nb, kb = tb.values.shape
+    bn = tb.bn
+    assert n == nb * bn and m % bm == 0 and o % bo == 0, (x.shape, tb.values.shape, bm, bo, bn)
+    grid = (m // bm, o // bo, nb)
     return pl.pallas_call(
-        functools.partial(_kernel, bk=bk),
+        _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),       # x row-tile
-            pl.BlockSpec((bo, k), lambda i, j: (j, 0)),       # values
-            pl.BlockSpec((bo, k), lambda i, j: (j, 0)),       # indices
+            pl.BlockSpec((bm, bn), lambda i, j, b: (i, b)),      # x col-block
+            pl.BlockSpec((bo, 1, kb), lambda i, j, b: (j, b, 0)),  # values
+            pl.BlockSpec((bo, 1, kb), lambda i, j, b: (j, b, 0)),  # local idx
         ],
-        out_specs=pl.BlockSpec((bm, bo), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, o), x.dtype),
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j, b: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
         interpret=interpret,
-    )(x, values, indices)
+    )(x, tb.values, tb.indices)

@@ -21,6 +21,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 Array = jax.Array
@@ -75,16 +76,35 @@ def bitmap_spmm_pallas(x: Array, bitmap: Array, packed: Array,
     )(x, bitmap, packed, offsets)
 
 
-def bitmap_encode(w: Array, bn: int) -> tuple[Array, Array, Array]:
+def bitmap_encode(w: Array, bn: int,
+                  k: int | None = None) -> tuple[Array, Array, Array]:
     """Encode a dense [O, N] matrix into (bitmap int8, packed [O, Kmax],
     offsets [O, N/bn] int32).  Kmax = max row NZE count (balanced pruning
-    makes every row hit Kmax exactly — zero padding waste)."""
+    makes every row hit Kmax exactly — zero padding waste).
+
+    The packed width must be static.  Pass ``k`` to keep the encoder
+    traceable/jittable (e.g. ``k = keep_count(n, sparsity)`` from the
+    pruning schedule); with ``k=None`` the width is measured on the host
+    via NumPy — no device round-trip, but ``w`` must be concrete.
+    """
     w = jnp.asarray(w)
     o, n = w.shape
     assert n % bn == 0, (n, bn)
     bits = (w != 0)
     counts = jnp.sum(bits, axis=1)
-    kmax = int(jnp.max(counts))
+    if k is None:
+        if isinstance(w, jax.core.Tracer):
+            raise ValueError("bitmap_encode under tracing needs a static k "
+                             "(the max row NZE count)")
+        kmax = int(np.count_nonzero(np.asarray(w), axis=1).max())
+    else:
+        kmax = int(k)
+        if not isinstance(w, jax.core.Tracer):
+            true_max = int(np.count_nonzero(np.asarray(w), axis=1).max())
+            if true_max > kmax:
+                raise ValueError(
+                    f"static k={kmax} < max row NZE count {true_max}: "
+                    "packed would silently truncate nonzeros")
     kmax = max(kmax, 1)
     # pack nonzeros to the front of each row (stable order)
     order = jnp.argsort(~bits, axis=1, stable=True)

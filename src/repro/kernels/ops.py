@@ -1,25 +1,39 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Responsibilities: tile-alignment padding, block-size selection, dtype
-handling, a differentiable path (Pallas forward + jnp backward via
-custom_vjp), and an XLA fallback (`impl="xla"`) that is the same math
-without pallas_call — used on backends without Pallas support and by the
-production (pjit) path where XLA's own fusions win.
+Responsibilities: tile-alignment padding, block-size *autotuning* (pick
+bm/bo/bn from shapes and a VMEM budget instead of hard-coded 128s), weight
+encoding into the tile-local balanced format with a per-weight-id cache, a
+differentiable path (Pallas forward + jnp backward via custom_vjp), and XLA
+fallbacks:
+
+* ``impl="pallas"``     — tile-local decode-and-matmul kernel (MXU-native;
+                          interpret mode on CPU)
+* ``impl="xla"``        — same math without pallas_call: densify the
+                          balanced weights (scatter) + one rank-2 dot.  XLA
+                          fuses this well; it is the production/pjit path.
+* ``impl="xla_gather"`` — the seed formulation (gather + rank-3 einsum).
+                          Shard-friendly (no scatter) but materializes an
+                          [M, O, K] buffer; kept for sharded weights and as
+                          the kernel_bench baseline.
 
 This container is CPU-only, so ``interpret=True`` is the default; on real
 TPU set ``REPRO_PALLAS_INTERPRET=0``.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import functools
 import os
+import weakref
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
-from .balanced_spmm import balanced_spmm_pallas
+from .balanced_spmm import tiled_balanced_spmm_pallas
 from .bitmap_spmm import bitmap_encode, bitmap_spmm_pallas
+from .tile_format import TiledBalanced, encode_tiled, max_block_count
 
 Array = jax.Array
 
@@ -39,46 +53,189 @@ def _pick_block(dim: int, preferred: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Block-size autotuner (shared by both kernels' wrappers)
+# ---------------------------------------------------------------------------
+
+# Per-core VMEM is ~16 MiB; leave room for double buffering + the compiler.
+_VMEM_BUDGET = int(os.environ.get("REPRO_VMEM_BUDGET", 4 * 1024 * 1024))
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockChoice:
+    bm: int
+    bo: int
+    bn: int
+    vmem_bytes: int     # modeled per-step footprint
+
+
+def _tiled_footprint(bm: int, bo: int, bn: int, kb: int, itemsize: int) -> int:
+    """Per-step VMEM bytes of the tiled kernel: x tile + (vals, idx) block +
+    decoded w_tile (f32) + f32 accumulator."""
+    return (bm * bn * itemsize + bo * kb * (itemsize + 4)
+            + bo * bn * 4 + bm * bo * 4)
+
+
+@functools.lru_cache(maxsize=512)
+def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
+                  vmem_budget: int = _VMEM_BUDGET) -> BlockChoice:
+    """Pick (bm, bo, bn) for the tiled balanced kernel.
+
+    Start from MXU-shaped 128s (shrunk toward small dims so padding stays
+    sane), then halve the dimension with the largest footprint share until
+    the modeled per-step VMEM (double-buffered) fits the budget.  KB is
+    estimated from the balanced invariant — per-block counts concentrate at
+    K * bn / N — with 50% slack; the encoder measures the real value.
+    """
+    bm = _pick_block(m, 128)
+    bo = _pick_block(o, 128)
+    bn = _pick_block(n, 128)
+
+    def kb_est(bn_):
+        return max(8, min(k, bn_, _round_up(int(k * bn_ / max(n, 1) * 1.5), 8)))
+
+    while 2 * _tiled_footprint(bm, bo, bn, kb_est(bn), itemsize) > vmem_budget:
+        # shrink the largest contributor; keep everything >= 8
+        shares = {
+            "bm": bm * (bn * itemsize + bo * 4),
+            "bo": bo * (kb_est(bn) * (itemsize + 4) + bn * 4 + bm * 4),
+            "bn": bn * (bm * itemsize + bo * 4),
+        }
+        for name in sorted(shares, key=shares.get, reverse=True):
+            if {"bm": bm, "bo": bo, "bn": bn}[name] > 8:
+                if name == "bm":
+                    bm //= 2
+                elif name == "bo":
+                    bo //= 2
+                else:
+                    bn //= 2
+                break
+        else:
+            break   # everything at the floor; accept the overshoot
+    return BlockChoice(bm=bm, bo=bo, bn=bn,
+                       vmem_bytes=_tiled_footprint(bm, bo, bn, kb_est(bn),
+                                                   itemsize))
+
+
+# ---------------------------------------------------------------------------
+# Tile-format encoding cache (keyed per weight id)
+# ---------------------------------------------------------------------------
+
+# id() keys are only valid while the source arrays are alive; entries keep
+# weakrefs whose finalizers evict the entry when a source array dies, so a
+# training loop creating fresh weights every step cannot pin dead arrays or
+# their (larger) encodings.  A bounded FIFO caps it either way.
+_ENC_CACHE: "collections.OrderedDict[tuple, tuple]" = collections.OrderedDict()
+_ENC_CACHE_MAX = 64
+_KB_CACHE: "collections.OrderedDict[tuple, int]" = collections.OrderedDict()
+
+
+def _cache_put(cache, key, entry, *source_arrays):
+    def evict(_ref, cache=cache, key=key):
+        cache.pop(key, None)
+    refs = []
+    for a in source_arrays:
+        try:
+            refs.append(weakref.ref(a, evict))
+        except TypeError:
+            return             # non-weakref-able: id() reuse undetectable,
+                               # safer not to cache at all
+    cache[key] = (refs, entry)
+    while len(cache) > _ENC_CACHE_MAX:
+        cache.popitem(last=False)
+
+
+def _cache_get(cache, key):
+    hit = cache.get(key)
+    if hit is None:
+        return None
+    refs, entry = hit
+    if any(r() is None for r in refs):     # stale id — source array died
+        cache.pop(key, None)
+        return None
+    cache.move_to_end(key)
+    return entry
+
+
+def _encode_cached(values, indices, n_in: int, bn: int,
+                   kb: int) -> TiledBalanced:
+    concrete = not (isinstance(values, jax.core.Tracer)
+                    or isinstance(indices, jax.core.Tracer))
+    if not concrete:
+        return encode_tiled(values, indices, n_in, bn=bn, kb=kb)
+    key = (id(values), id(indices), n_in, bn, kb)
+    tb = _cache_get(_ENC_CACHE, key)
+    if tb is None:
+        tb = encode_tiled(values, indices, n_in, bn=bn, kb=kb)
+        _cache_put(_ENC_CACHE, key, tb, values, indices)
+    return tb
+
+
+def _static_kb(values, indices, n_in: int, bn: int,
+               block_k: int | None) -> int:
+    """Static per-block capacity: caller hint > measured (concrete indices,
+    the usual case — patterns are fixed at prune time) > min(K, bn) bound.
+    Measurements are cached per indices id so repeated eager calls on the
+    same weights do not re-sync the index array to the host."""
+    if block_k is not None:
+        return max(8, _round_up(block_k, 8))
+    if not isinstance(indices, jax.core.Tracer):
+        key = (id(indices), n_in, bn)
+        kb = _cache_get(_KB_CACHE, key)
+        if kb is None:
+            kb = max_block_count(indices, n_in, bn)
+            _cache_put(_KB_CACHE, key, kb, indices)
+        return kb
+    return max(8, _round_up(min(values.shape[1], bn), 8))
+
+
+# ---------------------------------------------------------------------------
 # balanced_spmm: y = x @ W.T, W = (values[O,K], indices[O,K]) over N inputs
 # ---------------------------------------------------------------------------
 
-def _balanced_spmm_xla(x: Array, values: Array, indices: Array) -> Array:
-    """Gather formulation (differentiable, shard-friendly): the production
-    path.  y[m,o] = sum_j x[m, idx[o,j]] * v[o,j]."""
-    xg = jnp.take(x, indices, axis=1)              # [M, O, K]
-    return jnp.einsum("mok,ok->mo", xg, values,
-                      preferred_element_type=jnp.float32).astype(x.dtype)
+def _balanced_spmm_xla(x: Array, values: Array, indices: Array,
+                       n_in: int) -> Array:
+    """Densify (scatter) + rank-2 dot — MXU-eligible, XLA fuses the scatter
+    into the weight producer.  The production fallback."""
+    w = ref.balanced_dense(values, indices, n_in)
+    return jnp.dot(x, w.T,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-def _balanced_spmm_pallas_padded(x: Array, values: Array, indices: Array,
-                                 bm: int, bo: int, bk: int) -> Array:
-    m, n = x.shape
-    o, k = values.shape
-    bm = _pick_block(m, bm)
-    bo = _pick_block(o, bo)
-    bk = _pick_block(k, bk)
-    mp, op_, kp = _round_up(m, bm), _round_up(o, bo), _round_up(k, bk)
-    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
-    vp = jnp.pad(values, ((0, op_ - o), (0, kp - k)))
-    ip = jnp.pad(indices, ((0, op_ - o), (0, kp - k)))  # pad idx 0, val 0 -> 0
-    y = balanced_spmm_pallas(xp, vp, ip, bm=bm, bo=bo, bk=bk,
-                             interpret=_INTERPRET)
-    return y[:m, :o]
+def _balanced_spmm_pallas_tiled(x: Array, values: Array, indices: Array,
+                                n_in: int, blocks: tuple) -> Array:
+    bm, bo, bn, kb = blocks
+    m = x.shape[0]
+    o = values.shape[0]
+    tb = _encode_cached(values, indices, n_in, bn, kb)
+    mp, op_ = _round_up(m, bm), _round_up(o, bo)
+    xp = jnp.pad(x, ((0, mp - m), (0, tb.nb * bn - x.shape[1])))
+    if op_ != o:
+        # zero-padded rows decode to all-zero tiles — harmless
+        tb = TiledBalanced(
+            jnp.pad(tb.values, ((0, op_ - o), (0, 0), (0, 0))),
+            jnp.pad(tb.indices, ((0, op_ - o), (0, 0), (0, 0))),
+            jnp.pad(tb.counts, ((0, op_ - o), (0, 0))),
+            n_in=tb.n_in, bn=tb.bn)
+    y = tiled_balanced_spmm_pallas(xp, tb, bm=bm, bo=bo,
+                                   interpret=_INTERPRET)
+    return y[:m, :o].astype(x.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _balanced_spmm(x, values, indices, n_in, impl):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _balanced_spmm(x, values, indices, n_in, impl, blocks):
     if impl == "pallas":
-        return _balanced_spmm_pallas_padded(x, values, indices, 128, 128, 128)
-    return _balanced_spmm_xla(x, values, indices)
+        return _balanced_spmm_pallas_tiled(x, values, indices, n_in, blocks)
+    if impl == "xla_gather":
+        return ref.balanced_spmm_gather(x, values, indices)
+    return _balanced_spmm_xla(x, values, indices, n_in)
 
 
-def _balanced_fwd(x, values, indices, n_in, impl):
-    y = _balanced_spmm(x, values, indices, n_in, impl)
+def _balanced_fwd(x, values, indices, n_in, impl, blocks):
+    y = _balanced_spmm(x, values, indices, n_in, impl, blocks)
     return y, (x, values, indices)
 
 
-def _balanced_bwd(n_in, impl, res, dy):
+def _balanced_bwd(n_in, impl, blocks, res, dy):
     x, values, indices = res
     # dx = dy @ W  (scatter of values);  dvalues[o,j] = sum_m dy[m,o] x[m,idx]
     w = ref.balanced_dense(values, indices, n_in)
@@ -93,14 +250,25 @@ _balanced_spmm.defvjp(_balanced_fwd, _balanced_bwd)
 
 
 def balanced_spmm(x: Array, values: Array, indices: Array, *, n_in: int,
-                  impl: str = "pallas") -> Array:
+                  impl: str = "pallas", block_k: int | None = None) -> Array:
     """Differentiable balanced-sparse matmul.  x: [..., N] -> [..., O].
 
-    impl: "pallas" (TPU kernel, interpret on CPU) | "xla" (gather+einsum).
+    impl: "pallas" (tiled decode-and-matmul kernel, interpret on CPU) |
+    "xla" (densify + dot) | "xla_gather" (seed gather+einsum baseline).
+    ``block_k`` optionally pins the static per-block capacity KB (useful
+    when tracing with a known pruning pattern).
     """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y = _balanced_spmm(x2, values, indices.astype(jnp.int32), n_in, impl)
+    indices = indices.astype(jnp.int32)
+    if impl == "pallas":
+        c = choose_blocks(x2.shape[0], values.shape[0], n_in,
+                          values.shape[1], itemsize=x.dtype.itemsize)
+        kb = _static_kb(values, indices, n_in, c.bn, block_k)
+        blocks = (c.bm, c.bo, c.bn, kb)
+    else:
+        blocks = None
+    y = _balanced_spmm(x2, values, indices, n_in, impl, blocks)
     return y.reshape(*lead, values.shape[0])
 
 
@@ -132,9 +300,10 @@ def bitmap_spmm(x: Array, bitmap: Array, packed: Array, offsets: Array, *,
     return y[:m, :o].astype(x.dtype).reshape(*lead, o)
 
 
-def encode_bitmap(w: Array, *, bn: int = 128):
+def encode_bitmap(w: Array, *, bn: int = 128, k: int | None = None):
     """Dense [O, N] -> (bitmap, packed, offsets); N must be bn-aligned."""
-    return bitmap_encode(w, bn)
+    return bitmap_encode(w, bn, k=k)
 
 
-__all__ = ["balanced_spmm", "bitmap_spmm", "encode_bitmap"]
+__all__ = ["balanced_spmm", "bitmap_spmm", "encode_bitmap", "choose_blocks",
+           "BlockChoice"]

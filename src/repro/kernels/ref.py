@@ -29,6 +29,26 @@ def balanced_spmm_ref(x: Array, values: Array, indices: Array) -> Array:
     return jnp.dot(x, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def balanced_spmm_gather(x: Array, values: Array, indices: Array) -> Array:
+    """The seed kernel's math: gather ``x`` per (output, nonzero) and reduce
+    with a rank-3 einsum.  Kept as the perf baseline for
+    `benchmarks/kernel_bench.py` and as a shard-friendly formulation (no
+    scatter) for sharded weights; it materializes an [M, O, K] buffer, so
+    the tiled decode-and-matmul path replaces it on the hot paths."""
+    xg = jnp.take(x, indices, axis=1)              # [M, O, K]
+    return jnp.einsum("mok,ok->mo", xg, values,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def tiled_balanced_spmm_ref(x: Array, tb) -> Array:
+    """y = x @ W.T for W in the tile-local format — block-by-block densify +
+    rank-2 dot, independent of the Pallas grid walk."""
+    from .tile_format import tiled_to_dense
+    w = tiled_to_dense(tb)
+    return jnp.dot(x[:, :tb.n_in], w.T,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
 def bitmap_dense(bitmap: Array, packed: Array) -> Array:
     """Densify a bitmap-compressed matrix.
 

@@ -1,0 +1,190 @@
+"""Tile-local balanced-sparse weight format (DESIGN.md §3.2).
+
+The flat Sense format ``(values[O, K], indices[O, K])`` stores each output
+row's K nonzeros with *global* input indices.  That forces the kernel to
+gather across the whole input dimension per output tile — a rank-3
+``[bm, bo, bk]`` buffer and a VPU-style einsum, no MXU.
+
+The tile-local format re-partitions each row's nonzeros by ``bn``-wide
+column blocks of the input dimension, exactly the blocks a grid-``(M, O,
+N/bn)`` kernel walks:
+
+* ``values[O, NB, KB]``  — nonzero values, zero-padded per block
+* ``indices[O, NB, KB]`` — *block-local* column indices in ``[0, bn)``
+* ``counts[O, NB]``      — true nonzeros per (row, block)
+
+``KB`` is the per-block capacity (max count, rounded up for sublane
+alignment).  This is where the model/hardware co-design pays off twice:
+Sense's balanced pruning keeps per-row totals equal (K identical), and for
+magnitude pruning of i.i.d. weights the split across ``NB`` blocks is
+hypergeometric, so per-block counts concentrate near ``K/NB`` — ``KB`` sits
+close to the mean and the zero padding stays small (`block_imbalance`
+measures the slack).  The kernel scatter-decodes one ``[bo, bn]`` dense tile
+per grid step and feeds the MXU a rank-2 ``[bm, bn] x [bn, bo]`` product;
+padded entries carry value 0 and index 0, so the decode needs no count
+masking at runtime (``counts`` is for diagnostics and storage accounting).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# Sublane-friendly rounding for the KB axis (f32 min tile is 8 x 128).
+_KB_ROUND = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass
+class TiledBalanced:
+    """Block-partitioned balanced-sparse matrix (see module docstring)."""
+    values: Array    # [O, NB, KB]
+    indices: Array   # [O, NB, KB] int32, block-local in [0, bn)
+    counts: Array    # [O, NB] int32, true NZE per block
+    n_in: int        # dense input dimension (NB * bn >= n_in)
+    bn: int          # column-block width
+
+    @property
+    def n_out(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def nb(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def kb(self) -> int:
+        return self.values.shape[2]
+
+    @property
+    def k(self) -> int:
+        """Total nonzeros per row (the flat format's K)."""
+        return int(np.asarray(jnp.sum(self.counts[0])))
+
+    def to_dense(self) -> Array:
+        return tiled_to_dense(self)
+
+    def tree_flatten(self):
+        return (self.values, self.indices, self.counts), (self.n_in, self.bn)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux[0], aux[1])
+
+
+jax.tree_util.register_pytree_node(
+    TiledBalanced, TiledBalanced.tree_flatten, TiledBalanced.tree_unflatten)
+
+
+def max_block_count(indices, n_in: int, bn: int) -> int:
+    """Concrete KB for a flat index array: max per-(row, block) entry count,
+    rounded up to a sublane multiple.  Host-side (requires concrete data)."""
+    idx = np.asarray(indices)
+    o, k = idx.shape
+    nb = -(-n_in // bn)
+    blk = idx // bn
+    counts = np.zeros((o, nb), np.int64)
+    np.add.at(counts, (np.arange(o)[:, None], blk), 1)
+    return max(_KB_ROUND, _round_up(int(counts.max()), _KB_ROUND))
+
+
+def encode_tiled(values, indices, n_in: int, *, bn: int,
+                 kb: int | None = None) -> TiledBalanced:
+    """Flat balanced ``(values[O,K], indices[O,K])`` -> `TiledBalanced`.
+
+    Works both eagerly and under tracing: the block structure (slots,
+    counts, local indices) is derived from ``indices`` on the host whenever
+    they are concrete — the common case, since the sparsity *pattern* is
+    fixed at prune time even while values are being trained — and falls back
+    to a fully traceable jnp path otherwise.  ``kb`` must be static; when
+    not given it is measured from concrete indices, or bounded by
+    ``min(K, bn)`` (the worst case a single block can hold) under tracing.
+    """
+    o, k = values.shape
+    nb = -(-n_in // bn)
+    idx_concrete = not isinstance(indices, jax.core.Tracer)
+    if kb is None:
+        if idx_concrete:
+            kb = max_block_count(indices, n_in, bn)
+        else:
+            kb = max(_KB_ROUND, _round_up(min(k, bn), _KB_ROUND))
+
+    rows = np.arange(o)[:, None]
+    if idx_concrete:
+        idx = np.asarray(indices)
+        # stable sort by block id (indices from to_balanced_sparse are
+        # already ascending; this only defends against unsorted callers).
+        order = np.argsort(idx // bn, axis=1, kind="stable")
+        idx_s = np.take_along_axis(idx, order, axis=1)
+        blk = idx_s // bn
+        counts = np.zeros((o, nb), np.int32)
+        np.add.at(counts, (rows, blk), 1)
+        if int(counts.max()) > kb:
+            raise ValueError(f"kb={kb} < max per-block count {counts.max()}")
+        off = np.cumsum(counts, axis=1) - counts          # exclusive
+        slot = np.arange(k)[None, :] - np.take_along_axis(off, blk, axis=1)
+        ti = np.zeros((o, nb, kb), np.int32)
+        ti[rows, blk, slot] = idx_s % bn
+        val_s = jnp.take_along_axis(jnp.asarray(values), jnp.asarray(order),
+                                    axis=1)
+        tv = jnp.zeros((o, nb, kb), values.dtype).at[
+            jnp.asarray(rows), jnp.asarray(blk), jnp.asarray(slot)].set(val_s)
+        return TiledBalanced(tv, jnp.asarray(ti), jnp.asarray(counts),
+                             n_in=n_in, bn=bn)
+
+    # Fully traced path (indices themselves are being transformed).
+    jrows = jnp.arange(o)[:, None]
+    order = jnp.argsort(indices // bn, axis=1, stable=True)
+    idx_s = jnp.take_along_axis(indices, order, axis=1)
+    val_s = jnp.take_along_axis(values, order, axis=1)
+    blk = idx_s // bn
+    counts = jnp.sum(blk[:, :, None] == jnp.arange(nb)[None, None, :],
+                     axis=1).astype(jnp.int32)
+    off = jnp.cumsum(counts, axis=1) - counts
+    slot = jnp.arange(k)[None, :] - jnp.take_along_axis(off, blk, axis=1)
+    tv = jnp.zeros((o, nb, kb), values.dtype).at[jrows, blk, slot].set(
+        val_s, mode="drop")
+    ti = jnp.zeros((o, nb, kb), jnp.int32).at[jrows, blk, slot].set(
+        (idx_s % bn).astype(jnp.int32), mode="drop")
+    return TiledBalanced(tv, ti, counts, n_in=n_in, bn=bn)
+
+
+def tiled_to_dense(tb: TiledBalanced) -> Array:
+    """Densify to ``[O, n_in]`` (reference/inverse of `encode_tiled`)."""
+    o, nb, kb = tb.values.shape
+    rows = jnp.arange(o)[:, None, None]
+    cols = jnp.arange(nb)[None, :, None] * tb.bn + tb.indices
+    dense = jnp.zeros((o, nb * tb.bn), tb.values.dtype)
+    dense = dense.at[rows, cols].add(tb.values)
+    return dense[:, :tb.n_in]
+
+
+def block_imbalance(tb: TiledBalanced) -> float:
+    """KB padding slack: capacity / mean block count (1.0 == no waste).
+
+    Balanced pruning keeps this near 1 + O(sqrt(NB/K)); large values mean
+    the block width ``bn`` is too fine for the row's nonzero budget.
+    """
+    mean = float(jnp.mean(tb.counts.astype(jnp.float32)))
+    return tb.kb / max(mean, 1e-9)
+
+
+def tiled_storage_bits(tb: TiledBalanced, *, elem_bits: int = 16,
+                       count_bits: int = 16) -> int:
+    """DRAM footprint of the tiled format (values + local indices + counts).
+
+    Block-local indices need only ``ceil(log2 bn)`` bits (vs ``log2 N`` for
+    flat global indices) — the format's storage edge at equal padding.
+    Bit layout matches `core.compression.balanced_tiled_bits` (the shape-
+    level model); this measures a concrete weight.
+    """
+    idx_bits = max(1, (tb.bn - 1).bit_length())
+    n_slots = tb.n_out * tb.nb * tb.kb
+    return n_slots * (elem_bits + idx_bits) + tb.n_out * tb.nb * count_bits

@@ -274,7 +274,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        # list in current JAX, dict in older — normalized to a dict
+        cost = hlo_cost.xla_cost_dict(compiled.cost_analysis())
         hlo = compiled.as_text()
         walked = hlo_cost.analyze(hlo)       # trip-count-aware (per device)
         n_chips = mesh.size

@@ -106,6 +106,21 @@ class Cost:
         return sum(self.coll.values())
 
 
+def xla_cost_dict(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returned a flat dict of properties; current JAX returns a
+    list with one dict per program (usually length 1).  Returns the first
+    program's dict (or {} when unavailable) so callers can ``.get`` keys
+    like "flops" / "bytes accessed" uniformly.
+    """
+    if isinstance(cost, dict):
+        return cost
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost and isinstance(cost[0], dict) else {}
+    return {}
+
+
 def parse_computations(hlo: str) -> tuple[dict, str]:
     """Split HLO text into {comp_name: [Inst]}; returns (comps, entry_name)."""
     comps: dict[str, list[Inst]] = {}

@@ -206,6 +206,26 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
 
 
 # ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def sparse_linear(x: Array, sp, *, impl: str = "pallas",
+                  block_k: int | None = None) -> Array:
+    """Balanced-sparse projection ``y = x @ W.T`` with W in the Sense
+    K-per-row format (`core.pruning.BalancedSparse`).
+
+    Routes through the tiled decode-and-matmul kernel path
+    (`kernels.ops.balanced_spmm`); ``block_k`` pins the tile-local format's
+    static per-block capacity when the pruning pattern is known at trace
+    time (pass the per-bn-block max NZE count measured from the mask).
+    This is the serving-path primitive for ``cfg.sparse_serving`` models
+    and the FC layers of the CNN zoo.
+    """
+    from ..core.sparse_ops import sparse_matmul
+    return sparse_matmul(x, sp, impl=impl, block_k=block_k)
+
+
+# ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------
 

@@ -76,6 +76,7 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_sharded_lower_compile_16dev_subprocess():
     """Every model family lowers+compiles on a real 4x4 mesh and the HLO
     contains collective traffic (the sharding annotations are live)."""
@@ -88,6 +89,7 @@ def test_sharded_lower_compile_16dev_subprocess():
     assert "SUBPROCESS_OK" in out.stdout, out.stderr[-3000:]
 
 
+@pytest.mark.slow
 def test_dryrun_results_complete():
     """The dry-run campaign must cover all 40 cells x 2 meshes with no
     errors (compile failures are bugs in the distribution config)."""

@@ -7,6 +7,7 @@ import pytest
 from repro.launch import hlo_cost
 
 
+@pytest.mark.slow
 def test_scan_flops_multiply_trip_count():
     def f(x, w):
         def body(h, _):
@@ -20,10 +21,13 @@ def test_scan_flops_multiply_trip_count():
     cost = hlo_cost.analyze(c.as_text())
     expected = 10 * (2 * 64 * 32 * 32 + 64 * 32)   # matmul + tanh per step
     assert abs(cost.flops - expected) / expected < 0.02
-    # xla's own analysis counts the body once — we must beat it by ~10x
-    assert cost.flops > 5 * float(c.cost_analysis()["flops"])
+    # xla's own analysis counts the body once — we must beat it by ~10x.
+    # cost_analysis() returns a list in current JAX, a dict in older ones.
+    xla_cost = hlo_cost.xla_cost_dict(c.cost_analysis())
+    assert cost.flops > 5 * float(xla_cost.get("flops", 0.0))
 
 
+@pytest.mark.slow
 def test_nested_scan_trip_counts_compose():
     def f(x, w):
         def outer(h, _):

@@ -73,6 +73,112 @@ def test_balanced_spmm_grads_match_dense():
                                rtol=1e-4, atol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# Tile-local balanced format + decode-and-matmul path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,o,k", [(37, 96, 50, 24), (37, 96, 50, 7),
+                                     (130, 260, 33, 65)])
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_tiled_balanced_three_way_parity(m, n, o, k, dtype):
+    """Tiled Pallas == XLA fallback == dense reference on shapes aligned to
+    nothing (M, O, N all off-tile)."""
+    x = rand(10, (m, n), dtype)
+    sp = to_balanced_sparse(rand(11, (o, n), jnp.float32), k=k)
+    vals = sp.values.astype(dtype)
+    want = ref.balanced_spmm_ref(x, vals, sp.indices)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    for impl in ("pallas", "xla", "xla_gather"):
+        got = ops.balanced_spmm(x, vals, sp.indices, n_in=n, impl=impl)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol, err_msg=impl)
+
+
+def test_tile_format_roundtrip_and_balance():
+    from repro.kernels.tile_format import (block_imbalance, encode_tiled,
+                                           tiled_to_dense)
+    o, n, k, bn = 12, 200, 40, 64
+    sp = to_balanced_sparse(rand(12, (o, n), jnp.float32), k=k)
+    tb = sp.to_tiled(bn=bn)
+    assert tb.nb == -(-n // bn) and tb.bn == bn
+    # block-local indices stay inside their block
+    assert int(jnp.max(tb.indices)) < bn
+    # counts preserve the per-row total K (the balance invariant)
+    np.testing.assert_array_equal(np.asarray(jnp.sum(tb.counts, axis=1)),
+                                  np.full(o, k))
+    np.testing.assert_allclose(np.asarray(tiled_to_dense(tb)),
+                               np.asarray(sp.to_dense()), atol=0)
+    assert block_imbalance(tb) >= 1.0
+    # explicit kb: padding slots must not change the decode
+    tb2 = encode_tiled(sp.values, sp.indices, n, bn=bn, kb=tb.kb + 16)
+    np.testing.assert_allclose(np.asarray(tiled_to_dense(tb2)),
+                               np.asarray(sp.to_dense()), atol=0)
+
+
+def test_tiled_grads_match_dense_nonaligned():
+    """custom_vjp grads through the tiled Pallas fwd == dense grads, on a
+    non-tile-aligned shape."""
+    m, n, o, k = 37, 96, 50, 24
+    x = rand(13, (m, n), jnp.float32)
+    sp = to_balanced_sparse(rand(14, (o, n), jnp.float32), k=k)
+
+    def f_sparse(x, vals):
+        return jnp.sum(ops.balanced_spmm(x, vals, sp.indices, n_in=n,
+                                         impl="pallas") ** 2)
+
+    def f_dense(x, vals):
+        w = ref.balanced_dense(vals, sp.indices, n)
+        return jnp.sum((x @ w.T) ** 2)
+
+    gx1, gv1 = jax.grad(f_sparse, argnums=(0, 1))(x, sp.values)
+    gx2, gv2 = jax.grad(f_dense, argnums=(0, 1))(x, sp.values)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gv1), np.asarray(gv2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_choose_blocks_respects_vmem_budget():
+    c = ops.choose_blocks(4096, 4096, 8192, 4096, itemsize=4,
+                          vmem_budget=1 << 20)
+    assert 2 * c.vmem_bytes <= (1 << 20)
+    assert all(v >= 8 for v in (c.bm, c.bo, c.bn))
+    # small dims shrink blocks instead of padding 16x
+    c2 = ops.choose_blocks(8, 16, 32, 8, itemsize=4)
+    assert c2.bm <= 16 and c2.bo <= 32 and c2.bn <= 64
+
+
+def test_sparse_conv_chunked_matches_single_piece():
+    """Streaming the im2col GEMM in output-row chunks is exact."""
+    b, h, w_, ci, co, hk = 2, 16, 16, 4, 6, 3
+    x = rand(15, (b, h, w_, ci), jnp.float32)
+    sp = to_balanced_sparse(rand(16, (co, ci * hk * hk), jnp.float32), k=10)
+    one = sparse_conv2d(x, sp.values, sp.indices, sp.n_in, hk=hk, wk=hk,
+                        stride=2, padding="SAME", chunk_elems=1 << 30)
+    chunked = sparse_conv2d(x, sp.values, sp.indices, sp.n_in, hk=hk, wk=hk,
+                            stride=2, padding="SAME", chunk_elems=512)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(one),
+                               rtol=1e-5, atol=1e-5)
+    want = ref.sparse_conv2d_ref(
+        x, jnp.asarray(np.asarray(ref.balanced_dense(
+            sp.values, sp.indices, sp.n_in)).reshape(co, ci, hk, hk)
+            .transpose(2, 3, 1, 0)), stride=2, padding="SAME")
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bitmap_encode_static_k_jittable():
+    """bitmap_encode with a static k traces (no host sync on device data)."""
+    w = jnp.asarray(np.random.default_rng(3).standard_normal((6, 256))
+                    * (np.random.default_rng(4).random((6, 256)) > 0.6))
+    kmax = int(np.count_nonzero(np.asarray(w), axis=1).max())
+    enc = jax.jit(lambda w: bitmap_encode(w, 128, k=kmax))
+    bitmap, packed, offsets = enc(w)
+    np.testing.assert_allclose(np.asarray(ref.bitmap_dense(bitmap, packed)),
+                               np.asarray(w), atol=0)
+
+
 @pytest.mark.parametrize("o,n,sparsity", [(8, 128, 0.5), (16, 256, 0.9),
                                           (5, 128, 0.3)])
 def test_bitmap_spmm_matches_ref(o, n, sparsity):
