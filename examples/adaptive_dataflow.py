@@ -4,11 +4,18 @@
 
 Walks ResNet-50 layer by layer, showing I_mem/W_mem, the RIF and RWF DRAM
 costs, which mode the adaptive configuration picks, and the network totals
-vs Swallow's fixed compute-in-row (RIF) dataflow.
+vs Swallow's fixed compute-in-row (RIF) dataflow.  Then builds an
+*executable* layer plan for the small CNN (engine.plan) to show the same
+per-layer decisions — dataflow mode, kernel impl, block sizes — attached
+to weights that actually run.
 """
+import jax
+
 from repro.core.dataflow import choose_dataflow, network_dram_access, swallow_dataflow
+from repro.core.pruning import balanced_prune_conv, balanced_prune_rows
 from repro.core.systolic import SystolicConfig
-from repro.models.cnn import network_layers
+from repro.engine.plan import plan_smallcnn
+from repro.models.cnn import SmallCNNConfig, network_layers, smallcnn_init
 
 
 def main():
@@ -37,6 +44,21 @@ def main():
               f"fixed-RIF {f['total_bits']/8e6:8.1f} MB  "
               f"reduction {f['total_bits']/a['total_bits']:.2f}x  "
               f"(RWF on {a['frac_rwf']*100:.0f}% of layers)")
+
+    # the same decisions as an executable plan (engine.plan): prune the
+    # small CNN, build its layer plan, print the mode/impl decisions the
+    # serving path will dispatch on
+    scfg = SmallCNNConfig()
+    params = smallcnn_init(scfg, jax.random.key(0))
+    masks = {}
+    for i in range(len(scfg.channels)):
+        _, masks[f"conv{i}"] = balanced_prune_conv(params[f"conv{i}"], 0.5)
+    for name in ("fc1", "fc2"):
+        _, masks[name] = balanced_prune_rows(params[name], 0.8)
+    plan = plan_smallcnn(scfg, params, masks,
+                         weight_buffer_bits=cfg.weight_buffer_bits)
+    print("\nexecutable layer plan (smallcnn, engine.plan):")
+    print(plan.summary())
 
 
 if __name__ == "__main__":

@@ -2,10 +2,14 @@
 
     PYTHONPATH=src python examples/serve_sparse_lm.py
 
-Wraps repro.launch.serve: balanced-prunes the LM's projections, generates
-with a KV cache for a batch of prompts, reports dense-vs-sparse tokens/s
-and the bitmap-compressed weight footprint.  (Dense pass is warmed up first
-so the comparison excludes compile time.)
+Wraps repro.launch.serve, which now runs the layer-plan engine: one
+offline pass balanced-prunes the LM's projections, picks each layer's
+dataflow mode (§V-C) and kernel impl (§VI-F), and pre-encodes the weights;
+prefill and decode then execute the plan — the balanced-sparse kernels run
+on the real token path (asserted via the engine's dispatch stats) and the
+sparse logits are checked against the masked-dense reference.  Reports
+dense-vs-sparse tokens/s, the per-layer mode/impl mix, and the compressed
+weight footprint.
 """
 from repro.launch import serve
 

@@ -23,10 +23,14 @@ from repro.optim import AdamWConfig, adamw_init, adamw_update, apply_masks
 
 
 def accuracy(cfg, params, data, masks=None, n_batches=10):
+    # eager eval loop: build the layer plan once (weights fixed here) and
+    # reuse it per batch instead of re-planning every forward
+    from repro.engine.plan import plan_smallcnn
+    plan = plan_smallcnn(cfg, params, masks)
     correct = total = 0
     for i in range(n_batches):
         b = data.batch_at(10_000 + i)
-        logits = smallcnn_apply(cfg, params, b["image"], masks=masks)
+        logits = smallcnn_apply(cfg, params, b["image"], plan=plan)
         correct += int(jnp.sum(jnp.argmax(logits, -1) == b["label"]))
         total += b["label"].shape[0]
     return correct / total

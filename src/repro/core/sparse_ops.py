@@ -34,15 +34,24 @@ class SparseLinearSpec:
                 or self.ifm_sparsity >= IFM_SPARSE_THRESHOLD)
 
 
-def sparse_matmul(x: Array, sp: BalancedSparse, *, impl: str = "pallas",
+def sparse_matmul(x: Array, sp, *, impl: str = "pallas",
                   block_k: int | None = None) -> Array:
     """y = x @ W.T with W in the balanced format.
 
-    ``block_k`` pins the tile-local format's static per-block capacity for
-    the Pallas path — pass it when tracing with a known pruning pattern
-    (e.g. measured from the concrete mask) to avoid the conservative
-    min(K, bn) bound.
+    Delegates to the layer-plan engine when given a `LayerPlan` (encoding
+    done once offline; ``impl``/``block_k`` were fixed at plan time).  A
+    flat `BalancedSparse` is the *ad-hoc* path and goes through
+    `kernels.ops.balanced_spmm`, whose id()-keyed encode cache exists
+    precisely so repeated eager calls on the same weights don't re-encode
+    — callers wanting plan semantics build one with
+    `engine.plan.plan_from_balanced`.  ``block_k`` pins the tile-local
+    format's static per-block capacity (avoids the conservative min(K, bn)
+    bound).
     """
+    from ..engine.execute import apply_fc
+    from ..engine.plan import LayerPlan
+    if isinstance(sp, LayerPlan):
+        return apply_fc(x, sp)
     return kernel_ops.balanced_spmm(x, sp.values, sp.indices, n_in=sp.n_in,
                                     impl=impl, block_k=block_k)
 

@@ -1,0 +1,18 @@
+"""Layer-plan engine: the model/hardware co-design loop as a plan/execute
+split (DESIGN.md §8).
+
+- plan:    one offline pass per model — per-layer dataflow mode (§V-C),
+           kernel impl (§VI-F), block sizes, and weights pre-encoded to the
+           kernel-native formats; `ModelPlan` is a jit-traceable,
+           checkpointable pytree.
+- execute: dispatch a `LayerPlan` at a call site (projection / conv), with
+           trace-time stats so serving can prove the sparse path ran.
+"""
+from . import execute, plan
+from .plan import (LayerPlan, ModelPlan, PlanSpec, build_layer_plan,
+                   masked_dense_params, plan_from_balanced, plan_smallcnn,
+                   plan_transformer)
+
+__all__ = ["plan", "execute", "LayerPlan", "ModelPlan", "PlanSpec",
+           "build_layer_plan", "plan_from_balanced", "plan_smallcnn",
+           "plan_transformer", "masked_dense_params"]

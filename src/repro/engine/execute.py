@@ -1,0 +1,107 @@
+"""Plan execution: dispatch one pre-built `LayerPlan` per call site.
+
+Where `plan.py` decides, this module merely *routes*: every projection and
+convolution the plan covers dispatches on `LayerPlan.spec.impl` with the
+weights already in the impl's native format — the Pallas path goes through
+`kernels.ops.tiled_spmm` (pre-encoded `TiledBalanced`, no id()-keyed
+encoding cache), the XLA fallbacks through `kernels.ops.balanced_spmm`
+(flat format, no cache consulted because impl != "pallas"), and dense
+layers through plain matmul/conv.
+
+STATS counts how many balanced-sparse kernel dispatches were *traced* into
+the computation (a trace-time counter: under jit each compiled executable
+counts its kernels once, not once per run).  `launch/serve.py` uses it to
+assert the sparse serving path is real rather than a dense matmul on
+zeroed weights.
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kernel_ops
+from ..kernels.sparse_conv import sparse_conv2d as _sparse_conv2d
+from .plan import LayerPlan, ModelPlan
+
+Array = jax.Array
+
+# trace-time dispatch counters (see module docstring)
+STATS: "collections.Counter[str]" = collections.Counter()
+
+
+def reset_stats() -> None:
+    STATS.clear()
+
+
+def stats() -> dict:
+    return dict(STATS)
+
+
+def apply_fc(x: Array, lp: LayerPlan) -> Array:
+    """y = x @ W.T for a planned linear layer; x: [..., N] -> [..., O]."""
+    spec = lp.spec
+    if spec.impl == "dense":
+        STATS["dense_matmul"] += 1
+        return jnp.dot(x, lp.weights.T,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    STATS["balanced_spmm"] += 1
+    STATS[f"impl_{spec.impl}"] += 1
+    if spec.impl == "pallas":
+        blk = spec.blocks
+        return kernel_ops.tiled_spmm(x, lp.weights, block_m=blk.bm,
+                                     block_o=blk.bo)
+    sp = lp.weights
+    return kernel_ops.balanced_spmm(x, sp.values, sp.indices, n_in=spec.n_in,
+                                    impl=spec.impl, block_k=spec.block_k)
+
+
+def apply_conv(x: Array, lp: LayerPlan) -> Array:
+    """NHWC convolution for a planned conv layer."""
+    spec = lp.spec
+    if spec.impl == "dense":
+        STATS["dense_conv"] += 1
+        pad = spec.conv_padding
+        if isinstance(pad, int):
+            pad = [(pad, pad), (pad, pad)]
+        return jax.lax.conv_general_dilated(
+            x, lp.weights.transpose(2, 3, 1, 0).astype(x.dtype),
+            (spec.stride, spec.stride), pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    STATS["balanced_spmm"] += 1
+    STATS[f"impl_{spec.impl}"] += 1
+    if spec.impl == "pallas":
+        tb = lp.weights
+        blk = spec.blocks
+
+        def matmul_fn(flat, values, indices, n_in):
+            return kernel_ops.tiled_spmm(flat, tb, block_m=blk.bm,
+                                         block_o=blk.bo)
+        vals, idx = tb.values, tb.indices
+    else:
+        sp = lp.weights
+
+        def matmul_fn(flat, values, indices, n_in):
+            return kernel_ops.balanced_spmm(flat, values, indices,
+                                            n_in=n_in, impl=spec.impl,
+                                            block_k=spec.block_k)
+        vals, idx = sp.values, sp.indices
+    return _sparse_conv2d(x, vals, idx, spec.n_in, hk=spec.hk, wk=spec.wk,
+                          stride=spec.stride, padding=spec.conv_padding,
+                          matmul_fn=matmul_fn)
+
+
+def apply_layer(x: Array, lp: LayerPlan) -> Array:
+    """Shape-directed dispatch: conv plans expect NHWC, fc plans [..., N]."""
+    if lp.spec.kind == "conv":
+        return apply_conv(x, lp)
+    return apply_fc(x, lp)
+
+
+def apply_named(x: Array, plan: ModelPlan, name: str) -> Array:
+    return apply_layer(x, plan.layers[name])
+
+
+__all__ = ["apply_fc", "apply_conv", "apply_layer", "apply_named",
+           "stats", "reset_stats", "STATS"]

@@ -1,0 +1,514 @@
+"""Layer-plan construction: one offline pass that fixes every per-layer
+execution decision (DESIGN.md §8).
+
+Sense's system contribution is that *model-side* analysis (per-layer
+sparsity, compressed storage sizes) drives the *hardware-side* execution
+strategy — Adaptive Dataflow Configuration picks RIF/RWF/ON_CHIP per layer
+from IFM/weight storage ratios (§V-C).  The engine restates that as a
+plan/execute split: `build_layer_plan` runs once per prunable layer and
+derives a `LayerPlan` —
+
+* **dataflow mode** (RIF / RWF / ON_CHIP) from `core.dataflow.choose_dataflow`
+  on the layer's measured sparsity,
+* **kernel impl** (pallas | xla | xla_gather | dense) from the §VI-F
+  computing-mode thresholds plus whether the pruning pattern is balanced,
+* **block sizes** from `kernels.ops.choose_blocks` (the VMEM-budget
+  autotuner), and
+* the weights **pre-encoded** to the impl's native format (`TiledBalanced`
+  for the Pallas kernel, flat `BalancedSparse` for the XLA fallbacks, dense
+  otherwise) as an explicit pytree artifact.
+
+`ModelPlan` is the per-model container: a registered pytree (jit-traceable,
+shardable, checkpointable through `checkpoint.store`) whose static decisions
+live in hashable aux data and whose weights are ordinary array leaves.  This
+replaces the per-call `id()`-keyed weakref encoding caches that `kernels/
+ops.py` needed when every call site re-derived its own dispatch: the plan
+*is* the cache, with explicit lifetime and explicit contents.
+
+Pattern vs values: plan construction requires the sparsity *pattern*
+(mask / indices) to be concrete — patterns freeze at prune time — but the
+*values* may be jit tracers, so `plan_smallcnn` can run inside a jitted,
+differentiated training step while the mask-derived structure stays static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dataflow import LayerSpec, choose_dataflow
+from ..core.pruning import (BalancedSparse, balanced_prune_rows, from_mask,
+                            keep_count)
+from ..core.sparse_ops import SparseLinearSpec
+from ..kernels import ops as kernel_ops
+from ..kernels.tile_format import (_KB_ROUND, _round_up, TiledBalanced,
+                                   encode_tiled, tiled_to_dense)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Mask analysis (moved here from models/cnn.py — plan-time, not call-time)
+# ---------------------------------------------------------------------------
+
+def balanced_mask_k(mask2d) -> int | None:
+    """Per-row NZE count if the mask is load-balanced, else None."""
+    counts = np.count_nonzero(np.asarray(mask2d), axis=1)
+    if counts.size and (counts == counts[0]).all() and counts[0] > 0:
+        return int(counts[0])
+    return None
+
+
+def mask_block_k(mask2d, bn: int = 128) -> int:
+    """Static per-bn-block NZE capacity from a concrete mask [O, N].
+
+    Computed at the coarsest kernel block width (128) by default; the
+    autotuner only ever picks power-of-two bn <= 128, and those blocks
+    nest, so this is a valid capacity for any finer partition.
+    """
+    m = np.asarray(mask2d) != 0
+    o, n = m.shape
+    nb = -(-n // bn)
+    pad = nb * bn - n
+    if pad:
+        m = np.pad(m, ((0, 0), (0, pad)))
+    return int(m.reshape(o, nb, bn).sum(axis=2).max())
+
+
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+def _pattern_indices(pattern: np.ndarray, k: int) -> np.ndarray:
+    """Nonzero column indices per row (ascending) of a balanced pattern —
+    pure NumPy so it stays concrete under a jit trace."""
+    idx = np.argsort(pattern == 0, axis=1, kind="stable")[:, :k]
+    return np.sort(idx, axis=1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# LayerPlan / ModelPlan pytrees
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """The static (hashable — it is jit aux data) half of a LayerPlan."""
+    name: str
+    kind: str                       # "fc" | "conv"
+    impl: str                       # pallas | xla | xla_gather | dense
+    mode: str                       # RIF | RWF | ON_CHIP (dataflow choice)
+    n_in: int
+    n_out: int
+    k: int                          # NZE per output row (n_in when dense)
+    block_k: int                    # static per-bn-block capacity (KB)
+    blocks: kernel_ops.BlockChoice | None
+    w_sparsity: float
+    d_mem_bits: int                 # chosen-mode DRAM traffic (model)
+    i_mem_bits: int
+    w_mem_bits: int
+    hk: int = 1                     # conv geometry (kind == "conv")
+    wk: int = 1
+    stride: int = 1
+    conv_padding: Any = "SAME"      # "SAME" | "VALID" | int
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.impl != "dense"
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    """One layer's frozen execution decision + its pre-encoded weights.
+
+    ``weights`` is `TiledBalanced` (impl == "pallas"), `BalancedSparse`
+    (impl in xla/xla_gather), or a dense array ([O, N] fc / [Co, Ci, Hk, Wk]
+    conv).  Leaves may carry an extra leading stacked-layer axis — `lax.scan`
+    slices it away while the spec aux rides along unchanged.
+    """
+    spec: PlanSpec
+    weights: Any
+
+    def tree_flatten(self):
+        return (self.weights,), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(spec=aux, weights=children[0])
+
+    def dense_weights(self) -> Array:
+        """Densify back to [.., O, N] (fc) / the stored 4-D array (conv
+        dense) — the masked-dense reference this plan must match."""
+        w = self.weights
+        if isinstance(w, TiledBalanced):
+            if w.values.ndim == 4:      # stacked [L, O, NB, KB]
+                return jnp.stack([
+                    tiled_to_dense(TiledBalanced(w.values[i], w.indices[i],
+                                                 w.counts[i], w.n_in, w.bn))
+                    for i in range(w.values.shape[0])])
+            return tiled_to_dense(w)
+        if isinstance(w, BalancedSparse):
+            from ..kernels import ref
+            if w.values.ndim == 3:      # stacked [L, O, K]
+                return jnp.stack([
+                    ref.balanced_dense(w.values[i], w.indices[i], w.n_in)
+                    for i in range(w.values.shape[0])])
+            return ref.balanced_dense(w.values, w.indices, w.n_in)
+        return w
+
+
+jax.tree_util.register_pytree_node(
+    LayerPlan, LayerPlan.tree_flatten, LayerPlan.tree_unflatten)
+
+
+@dataclasses.dataclass
+class ModelPlan:
+    """Per-model container of LayerPlans (a registered pytree).
+
+    ``layers`` maps layer name -> LayerPlan; ``meta`` is a hashable tuple of
+    (key, value) pairs recording how the plan was built.  Flattening is
+    ordered by sorted layer name so checkpoint save/restore round-trips.
+    """
+    layers: Dict[str, LayerPlan]
+    meta: Tuple = ()
+
+    def tree_flatten(self):
+        names = tuple(sorted(self.layers))
+        return tuple(self.layers[n] for n in names), (names, self.meta)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names, meta = aux
+        return cls(layers=dict(zip(names, children)), meta=meta)
+
+    # -- summaries ----------------------------------------------------------
+
+    def mode_mix(self) -> Dict[str, int]:
+        """Per-layer dataflow-mode counts (Fig.22b's RIF/RWF split)."""
+        mix: Dict[str, int] = {}
+        for lp in self.layers.values():
+            mix[lp.spec.mode] = mix.get(lp.spec.mode, 0) + 1
+        return mix
+
+    def impl_mix(self) -> Dict[str, int]:
+        mix: Dict[str, int] = {}
+        for lp in self.layers.values():
+            mix[lp.spec.impl] = mix.get(lp.spec.impl, 0) + 1
+        return mix
+
+    @property
+    def sparse_layer_count(self) -> int:
+        return sum(1 for lp in self.layers.values() if lp.spec.is_sparse)
+
+    def summary(self) -> str:
+        lines = [f"{'layer':14s} {'mode':>8s} {'impl':>10s} {'O':>6s} "
+                 f"{'N':>6s} {'K':>6s} {'spars':>6s} {'Dmem(Kb)':>9s}"]
+        for name in sorted(self.layers):
+            s = self.layers[name].spec
+            lines.append(f"{name:14s} {s.mode:>8s} {s.impl:>10s} "
+                         f"{s.n_out:6d} {s.n_in:6d} {s.k:6d} "
+                         f"{s.w_sparsity:6.2f} {s.d_mem_bits / 1e3:9.0f}")
+        lines.append(f"mode mix {self.mode_mix()}  impl mix {self.impl_mix()}")
+        return "\n".join(lines)
+
+
+jax.tree_util.register_pytree_node(
+    ModelPlan, ModelPlan.tree_flatten, ModelPlan.tree_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Impl policy (§VI-F computing-mode switch + backend capability)
+# ---------------------------------------------------------------------------
+
+def default_impl(*, balanced: bool, w_sparsity: float,
+                 ifm_sparsity: float = 0.0) -> str:
+    """dense below the §VI-F thresholds or for unbalanced patterns; else the
+    Pallas kernel when it compiles (real TPU), the XLA densify+dot fallback
+    when Pallas would run interpreted (CPU containers)."""
+    spec = SparseLinearSpec(w_sparsity=w_sparsity, ifm_sparsity=ifm_sparsity)
+    if not balanced or not spec.use_sparse:
+        return "dense"
+    return "xla" if kernel_ops._INTERPRET else "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Single-layer plan construction
+# ---------------------------------------------------------------------------
+
+def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
+                     kind: str = "fc", layer_spec: LayerSpec | None = None,
+                     m_hint: int = 128, impl: str | None = None,
+                     ifm_sparsity: float = 0.0, elem_bits: int = 16,
+                     weight_buffer_bits: int | None = None,
+                     n_is: int = 7, n_pe: int = 32,
+                     dtype=None, stride: int = 1,
+                     conv_padding: Any = "SAME") -> LayerPlan:
+    """Derive one LayerPlan from a dense weight (output-major [O, N] for fc,
+    [Co, Ci, Hk, Wk] for conv) and an optional pruning mask.
+
+    The pattern (``mask``, or the nonzero structure of a concrete ``w``)
+    must be concrete; ``w``'s values may be tracers.  ``impl`` overrides the
+    §VI-F policy but degrades to "dense" when the pattern is unbalanced or
+    unanalyzable (traced values, no mask) — the mask is still applied.
+    ``m_hint`` is the GEMM M the block autotuner optimizes for (execute
+    re-derives bm for other batch sizes).
+    """
+    # Pattern analysis runs in pure NumPy: inside a jit trace every jnp op
+    # stages (omnistaging) even on concrete operands, and the pattern must
+    # stay host-concrete for the static plan decisions.  Values may trace.
+    hk = wk = 1
+    if mask is not None:
+        if not _is_concrete(mask):
+            raise ValueError(f"{name}: plan construction needs a concrete "
+                             "mask (patterns freeze at prune time)")
+        mask_np = np.asarray(mask)
+    else:
+        mask_np = None
+    if w.ndim == 4:
+        kind = "conv"
+        co, ci, hk, wk = w.shape
+        w2 = w.reshape(co, -1)
+        mask2 = mask_np.reshape(co, -1) if mask_np is not None else None
+    elif w.ndim == 2:
+        w2 = w
+        mask2 = mask_np
+    else:
+        raise ValueError(f"expected 2-D or 4-D weights, got {w.shape}")
+    o, n = w2.shape
+    masked2 = w2 * mask2 if mask2 is not None else w2
+
+    if mask2 is not None:
+        pattern = mask2
+    elif _is_concrete(w2):
+        pattern = (np.asarray(w2) != 0).astype(np.float32)
+    else:
+        # traced values, no mask: nothing to analyze — stay dense
+        pattern = None
+    if pattern is not None:
+        k = balanced_mask_k(pattern)
+        balanced = k is not None and k < n
+        w_sparsity = 1.0 - (k / n) if balanced \
+            else 1.0 - float(np.count_nonzero(pattern)) / pattern.size
+    else:
+        k, balanced, w_sparsity = None, False, 0.0
+
+    # -- dataflow mode (§V-C) ----------------------------------------------
+    if layer_spec is None:
+        layer_spec = LayerSpec(name=name, kind="fc", c_i=n, c_o=o)
+    layer_spec = dataclasses.replace(layer_spec, w_sparsity=w_sparsity,
+                                     ifm_sparsity=ifm_sparsity)
+    flow = choose_dataflow(layer_spec, n_is=n_is, n_pe=n_pe,
+                           weight_buffer_bits=weight_buffer_bits,
+                           elem_bits=elem_bits)
+
+    # -- kernel impl (§VI-F) + blocks + encoding ----------------------------
+    if impl is None:
+        impl = default_impl(balanced=balanced, w_sparsity=w_sparsity,
+                            ifm_sparsity=ifm_sparsity)
+    elif impl != "dense" and not balanced:
+        # requested sparse impl is infeasible (unbalanced / dense pattern):
+        # degrade to dense — the mask is still applied
+        impl = "dense"
+
+    dt = dtype or w2.dtype
+    blocks = None
+    block_k = 0
+    if impl == "dense":
+        # conv keeps the 4-D layout apply_conv convolves with
+        masked = (w * mask_np if mask_np is not None else w) if w.ndim == 4 \
+            else masked2
+        weights: Any = masked.astype(dt)
+        k = n
+    else:
+        itemsize = jnp.dtype(dt).itemsize
+        blocks = kernel_ops.choose_blocks(m_hint, o, n, k, itemsize=itemsize)
+        idx = _pattern_indices(pattern, k)                # np [O, K] int32
+        vals = jnp.take_along_axis(jnp.asarray(masked2),
+                                   jnp.asarray(idx), axis=1).astype(dt)
+        block_k = max(_KB_ROUND,
+                      _round_up(mask_block_k(pattern, bn=blocks.bn),
+                                _KB_ROUND))
+        if impl == "pallas":
+            # np indices keep encode_tiled on its host (concrete) path
+            weights = encode_tiled(vals, idx, n, bn=blocks.bn, kb=block_k)
+        else:
+            weights = BalancedSparse(vals, idx, n)
+
+    spec = PlanSpec(name=name, kind=kind, impl=impl, mode=flow.mode,
+                    n_in=n, n_out=o, k=int(k), block_k=block_k,
+                    blocks=blocks, w_sparsity=float(w_sparsity),
+                    d_mem_bits=int(flow.d_mem_bits), i_mem_bits=int(flow.i_mem),
+                    w_mem_bits=int(flow.w_mem), hk=hk, wk=wk, stride=stride,
+                    conv_padding=conv_padding)
+    return LayerPlan(spec=spec, weights=weights)
+
+
+def plan_from_balanced(sp: BalancedSparse, *, name: str = "adhoc",
+                       impl: str = "pallas", block_k: int | None = None,
+                       m_hint: int = 128, ifm_sparsity: float = 0.0
+                       ) -> LayerPlan:
+    """Wrap an existing flat BalancedSparse as a single-layer plan (the
+    `core.sparse_ops` delegation path).  Indices must be concrete."""
+    o, k = sp.values.shape
+    n = sp.n_in
+    itemsize = jnp.dtype(sp.values.dtype).itemsize
+    blocks = kernel_ops.choose_blocks(m_hint, o, n, k, itemsize=itemsize)
+    if impl == "pallas":
+        if block_k is None:
+            from ..kernels.tile_format import max_block_count
+            block_k = max_block_count(sp.indices, n, blocks.bn)
+        else:
+            block_k = max(_KB_ROUND, _round_up(block_k, _KB_ROUND))
+        weights: Any = encode_tiled(sp.values, sp.indices, n, bn=blocks.bn,
+                                    kb=block_k)
+    else:
+        weights = sp
+    w_sparsity = 1.0 - k / n
+    flow = choose_dataflow(LayerSpec(name=name, kind="fc", c_i=n, c_o=o,
+                                     w_sparsity=w_sparsity,
+                                     ifm_sparsity=ifm_sparsity))
+    spec = PlanSpec(name=name, kind="fc", impl=impl, mode=flow.mode,
+                    n_in=n, n_out=o, k=k, block_k=block_k or 0,
+                    blocks=blocks, w_sparsity=w_sparsity,
+                    d_mem_bits=int(flow.d_mem_bits), i_mem_bits=int(flow.i_mem),
+                    w_mem_bits=int(flow.w_mem))
+    return LayerPlan(spec=spec, weights=weights)
+
+
+# ---------------------------------------------------------------------------
+# Model-level planners
+# ---------------------------------------------------------------------------
+
+def plan_smallcnn(cfg, params: dict, masks: dict | None = None, *,
+                  impl: str | None = None, ifm_sparsity: float = 0.0,
+                  weight_buffer_bits: int | None = None,
+                  m_hint: int = 4096) -> ModelPlan:
+    """One offline pass over the small CNN: conv layers with balanced masks
+    go through the sparse conv path, balanced fc masks through the balanced
+    GEMM, everything else stays dense (mask still applied)."""
+    masks = masks or {}
+    layers: Dict[str, LayerPlan] = {}
+    img, cin = cfg.img, 3
+    for i, cout in enumerate(cfg.channels):
+        name = f"conv{i}"
+        hw = img // (2 ** i)
+        geom = LayerSpec(name=name, kind="conv", h_i=hw, w_i=hw, c_i=cin,
+                         c_o=cout, h_k=cfg.kernel, w_k=cfg.kernel, stride=1,
+                         padding=cfg.kernel // 2)
+        layers[name] = build_layer_plan(
+            name, params[name], mask=masks.get(name), layer_spec=geom,
+            m_hint=m_hint, impl=impl, ifm_sparsity=ifm_sparsity,
+            weight_buffer_bits=weight_buffer_bits, conv_padding="SAME")
+        cin = cout
+    for name in ("fc1", "fc2"):
+        layers[name] = build_layer_plan(
+            name, params[name], mask=masks.get(name), kind="fc",
+            m_hint=m_hint, impl=impl, ifm_sparsity=ifm_sparsity,
+            weight_buffer_bits=weight_buffer_bits)
+    return ModelPlan(layers=layers, meta=(("model", "smallcnn"),))
+
+
+# The transformer projections the planner can prune (stacked [L, n_in,
+# n_out] entries of params["blocks"]); attention projections first, MLP
+# second.  MoE expert tensors are >2-D per layer and stay dense.
+ATTN_PROJ_NAMES = ("wq", "wk", "wv", "wo")
+MLP_PROJ_NAMES = ("w_gate", "w_up", "w_down", "w_in", "w_out")
+
+
+def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
+                     impl: str | None = None, include_mlp: bool = True,
+                     m_hint: int | None = None) -> ModelPlan:
+    """Offline plan for a transformer's projection matrices.
+
+    Each stacked projection ``[L, n_in, n_out]`` is balanced-pruned per
+    layer along the *input* dim (equal NZE per output channel — the Sense
+    invariant), encoded once, and stacked back on the leading L axis so
+    `lax.scan` can slice per-layer weights while the static spec rides as
+    aux data.  Values are cast to ``cfg.compute_dtype`` (what the dense
+    path multiplies in).  GEMV-shaped serving projections are ON_CHIP
+    under §V-C — every weight is read once — so the mode mix here is the
+    paper's FC story; the CNN planners exercise RIF/RWF.
+    """
+    sparsity = cfg.w_sparsity if sparsity is None else sparsity
+    if not 0.0 < sparsity < 1.0:
+        raise ValueError(f"need 0 < sparsity < 1, got {sparsity}")
+    blocks = params["blocks"]
+    names = [n for n in ATTN_PROJ_NAMES + (MLP_PROJ_NAMES if include_mlp
+                                           else ()) if n in blocks]
+    cd = jnp.dtype(cfg.compute_dtype)
+    m_hint = m_hint or 256
+    layers: Dict[str, LayerPlan] = {}
+    for nm in names:
+        w = blocks[nm]
+        if w.ndim != 3:
+            continue
+        l, n_in, n_out = w.shape
+        k = keep_count(n_in, sparsity)
+        if impl is None:
+            impl_nm = default_impl(balanced=True,
+                                   w_sparsity=1.0 - k / n_in)
+        else:
+            impl_nm = impl
+        per = []
+        for li in range(l):
+            wt = jnp.transpose(w[li]).astype(cd)          # [O, N]
+            pruned, mask = balanced_prune_rows(wt, sparsity)
+            per.append((pruned, np.asarray(mask)))
+        if impl_nm == "dense":
+            weights: Any = jnp.stack([p for p, _ in per])
+            blk = None
+            block_k = 0
+        else:
+            itemsize = cd.itemsize
+            blk = kernel_ops.choose_blocks(m_hint, n_out, n_in, k,
+                                           itemsize=itemsize)
+            block_k = max(_KB_ROUND, _round_up(
+                max(mask_block_k(m, bn=blk.bn) for _, m in per), _KB_ROUND))
+            sps = [from_mask(p, jnp.asarray(m)) for p, m in per]
+            if impl_nm == "pallas":
+                tbs = [encode_tiled(s.values.astype(cd), s.indices, n_in,
+                                    bn=blk.bn, kb=block_k) for s in sps]
+                weights = TiledBalanced(
+                    jnp.stack([t.values for t in tbs]),
+                    jnp.stack([t.indices for t in tbs]),
+                    jnp.stack([t.counts for t in tbs]),
+                    n_in=n_in, bn=blk.bn)
+            else:
+                weights = BalancedSparse(
+                    jnp.stack([s.values.astype(cd) for s in sps]),
+                    jnp.stack([s.indices for s in sps]), n_in)
+        flow = choose_dataflow(LayerSpec(name=nm, kind="fc", c_i=n_in,
+                                         c_o=n_out,
+                                         w_sparsity=1.0 - k / n_in))
+        spec = PlanSpec(name=nm, kind="fc", impl=impl_nm, mode=flow.mode,
+                        n_in=n_in, n_out=n_out, k=k, block_k=block_k,
+                        blocks=blk, w_sparsity=1.0 - k / n_in,
+                        d_mem_bits=int(flow.d_mem_bits) * l,
+                        i_mem_bits=int(flow.i_mem) * l,
+                        w_mem_bits=int(flow.w_mem) * l)
+        layers[nm] = LayerPlan(spec=spec, weights=weights)
+    return ModelPlan(layers=layers,
+                     meta=(("model", cfg.name), ("sparsity", float(sparsity)),
+                           ("n_layers", int(cfg.n_layers))))
+
+
+def masked_dense_params(params: dict, plan: ModelPlan) -> dict:
+    """The masked-dense reference: the same pruned weights as the plan,
+    densified back into the params layout ([L, n_in, n_out]).  Sparse-plan
+    serving must match this numerically."""
+    blocks = dict(params["blocks"])
+    for nm, lp in plan.layers.items():
+        dense = lp.dense_weights()                        # [L, O, N]
+        blocks[nm] = jnp.transpose(dense, (0, 2, 1)).astype(
+            params["blocks"][nm].dtype)
+    out = dict(params)
+    out["blocks"] = blocks
+    return out
+
+
+__all__ = ["LayerPlan", "ModelPlan", "PlanSpec", "balanced_mask_k",
+           "mask_block_k", "build_layer_plan", "plan_from_balanced",
+           "plan_smallcnn", "plan_transformer", "masked_dense_params",
+           "default_impl", "ATTN_PROJ_NAMES", "MLP_PROJ_NAMES"]

@@ -14,10 +14,11 @@ cache, custom_vjp, XLA fallbacks); ref.py holds the pure-jnp oracles every
 kernel is validated against.
 """
 from . import ops, ref
-from .ops import balanced_spmm, bitmap_spmm, choose_blocks, encode_bitmap
+from .ops import (balanced_spmm, bitmap_spmm, choose_blocks, encode_bitmap,
+                  tiled_spmm)
 from .sparse_conv import im2col, sparse_conv2d
 from .tile_format import TiledBalanced, encode_tiled, tiled_to_dense
 
-__all__ = ["ops", "ref", "balanced_spmm", "bitmap_spmm", "encode_bitmap",
-           "choose_blocks", "im2col", "sparse_conv2d", "TiledBalanced",
-           "encode_tiled", "tiled_to_dense"]
+__all__ = ["ops", "ref", "balanced_spmm", "tiled_spmm", "bitmap_spmm",
+           "encode_bitmap", "choose_blocks", "im2col", "sparse_conv2d",
+           "TiledBalanced", "encode_tiled", "tiled_to_dense"]

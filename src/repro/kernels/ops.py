@@ -75,31 +75,61 @@ def _tiled_footprint(bm: int, bo: int, bn: int, kb: int, itemsize: int) -> int:
             + bo * bn * 4 + bm * bo * 4)
 
 
+def _bitmap_footprint(bm: int, bo: int, bn: int, k: int, itemsize: int) -> int:
+    """Per-step VMEM bytes of the bitmap kernel: x tile + bitmap block (int8)
+    + full packed row block + offsets column + decoded w_tile (f32) + f32
+    accumulator.  ``packed`` is blocked over O only ([bo, K]), so the whole
+    row's K NZEs sit in VMEM every step."""
+    return (bm * bn * itemsize + bo * bn + bo * k * itemsize + bo * 4
+            + bo * bn * 4 + bm * bo * 4)
+
+
 @functools.lru_cache(maxsize=512)
 def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
-                  vmem_budget: int = _VMEM_BUDGET) -> BlockChoice:
-    """Pick (bm, bo, bn) for the tiled balanced kernel.
+                  vmem_budget: int = _VMEM_BUDGET, kind: str = "tiled",
+                  bn: int | None = None) -> BlockChoice:
+    """Pick (bm, bo, bn) for the balanced-sparse kernels.
 
     Start from MXU-shaped 128s (shrunk toward small dims so padding stays
     sane), then halve the dimension with the largest footprint share until
-    the modeled per-step VMEM (double-buffered) fits the budget.  KB is
+    the modeled per-step VMEM (double-buffered) fits the budget.
+
+    ``kind`` selects the footprint model: "tiled" (decode-and-matmul; KB is
     estimated from the balanced invariant — per-block counts concentrate at
-    K * bn / N — with 50% slack; the encoder measures the real value.
+    K * bn / N — with 50% slack; the encoder measures the real value) or
+    "bitmap" (bitmap-decode; ``k`` is the static packed width).  Passing
+    ``bn`` pins the column-block width — the bitmap format bakes it into the
+    encoding (offsets are per-bn-block), so only bm/bo may shrink there.
     """
     bm = _pick_block(m, 128)
     bo = _pick_block(o, 128)
-    bn = _pick_block(n, 128)
+    bn_fixed = bn is not None
+    if not bn_fixed:
+        bn = _pick_block(n, 128)
 
     def kb_est(bn_):
         return max(8, min(k, bn_, _round_up(int(k * bn_ / max(n, 1) * 1.5), 8)))
 
-    while 2 * _tiled_footprint(bm, bo, bn, kb_est(bn), itemsize) > vmem_budget:
+    def footprint(bm_, bo_, bn_):
+        if kind == "bitmap":
+            return _bitmap_footprint(bm_, bo_, bn_, k, itemsize)
+        return _tiled_footprint(bm_, bo_, bn_, kb_est(bn_), itemsize)
+
+    while 2 * footprint(bm, bo, bn) > vmem_budget:
         # shrink the largest contributor; keep everything >= 8
-        shares = {
-            "bm": bm * (bn * itemsize + bo * 4),
-            "bo": bo * (kb_est(bn) * (itemsize + 4) + bn * 4 + bm * 4),
-            "bn": bn * (bm * itemsize + bo * 4),
-        }
+        if kind == "bitmap":
+            shares = {
+                "bm": bm * (bn * itemsize + bo * 4),
+                "bo": bo * (bn + k * itemsize + 4 + bn * 4 + bm * 4),
+            }
+        else:
+            shares = {
+                "bm": bm * (bn * itemsize + bo * 4),
+                "bo": bo * (kb_est(bn) * (itemsize + 4) + bn * 4 + bm * 4),
+                "bn": bn * (bm * itemsize + bo * 4),
+            }
+        if bn_fixed:
+            shares.pop("bn", None)
         for name in sorted(shares, key=shares.get, reverse=True):
             if {"bm": bm, "bo": bo, "bn": bn}[name] > 8:
                 if name == "bm":
@@ -112,8 +142,7 @@ def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
         else:
             break   # everything at the floor; accept the overshoot
     return BlockChoice(bm=bm, bo=bo, bn=bn,
-                       vmem_bytes=_tiled_footprint(bm, bo, bn, kb_est(bn),
-                                                   itemsize))
+                       vmem_bytes=footprint(bm, bo, bn))
 
 
 # ---------------------------------------------------------------------------
@@ -201,14 +230,13 @@ def _balanced_spmm_xla(x: Array, values: Array, indices: Array,
                    preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-def _balanced_spmm_pallas_tiled(x: Array, values: Array, indices: Array,
-                                n_in: int, blocks: tuple) -> Array:
-    bm, bo, bn, kb = blocks
+def _pad_and_run_tiled(x: Array, tb: TiledBalanced, bm: int,
+                       bo: int) -> Array:
+    """Pad (M, O, N) to tile multiples, run the kernel, slice back."""
     m = x.shape[0]
-    o = values.shape[0]
-    tb = _encode_cached(values, indices, n_in, bn, kb)
+    o = tb.values.shape[0]
     mp, op_ = _round_up(m, bm), _round_up(o, bo)
-    xp = jnp.pad(x, ((0, mp - m), (0, tb.nb * bn - x.shape[1])))
+    xp = jnp.pad(x, ((0, mp - m), (0, tb.nb * tb.bn - x.shape[1])))
     if op_ != o:
         # zero-padded rows decode to all-zero tiles — harmless
         tb = TiledBalanced(
@@ -219,6 +247,13 @@ def _balanced_spmm_pallas_tiled(x: Array, values: Array, indices: Array,
     y = tiled_balanced_spmm_pallas(xp, tb, bm=bm, bo=bo,
                                    interpret=_INTERPRET)
     return y[:m, :o].astype(x.dtype)
+
+
+def _balanced_spmm_pallas_tiled(x: Array, values: Array, indices: Array,
+                                n_in: int, blocks: tuple) -> Array:
+    bm, bo, bn, kb = blocks
+    tb = _encode_cached(values, indices, n_in, bn, kb)
+    return _pad_and_run_tiled(x, tb, bm, bo)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -273,6 +308,63 @@ def balanced_spmm(x: Array, values: Array, indices: Array, *, n_in: int,
 
 
 # ---------------------------------------------------------------------------
+# tiled_spmm: the pre-encoded (plan-driven) entry point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _tiled_spmm(x, values, indices, counts, n_in, bn, bm, bo):
+    tb = TiledBalanced(values, indices, counts, n_in=n_in, bn=bn)
+    return _pad_and_run_tiled(x, tb, bm, bo)
+
+
+def _tiled_fwd(x, values, indices, counts, n_in, bn, bm, bo):
+    y = _tiled_spmm(x, values, indices, counts, n_in, bn, bm, bo)
+    return y, (x, values, indices, counts)
+
+
+def _tiled_bwd(n_in, bn, bm, bo, res, dy):
+    from .tile_format import tiled_to_dense
+    x, values, indices, counts = res
+    o, nb, kb = values.shape
+    w = tiled_to_dense(TiledBalanced(values, indices, counts,
+                                     n_in=n_in, bn=bn))           # [O, N]
+    dx = jnp.dot(dy, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    # dW[o, n] = sum_m dy[m, o] x[m, n], gathered back into the tile slots;
+    # padded slots (idx 0 beyond the block count) must not pick up dW[.., 0]
+    dw = jnp.einsum("mo,mn->on", dy, x,
+                    preferred_element_type=jnp.float32)           # [O, N]
+    dw = jnp.pad(dw, ((0, 0), (0, nb * bn - n_in)))
+    cols = jnp.arange(nb)[None, :, None] * bn + indices           # [O, NB, KB]
+    gathered = jnp.take_along_axis(dw[:, None, :], cols.reshape(o, 1, -1),
+                                   axis=2).reshape(o, nb, kb)
+    valid = jnp.arange(kb)[None, None, :] < counts[..., None]
+    dvals = jnp.where(valid, gathered, 0.0).astype(values.dtype)
+    return dx, dvals, None, None
+
+
+_tiled_spmm.defvjp(_tiled_fwd, _tiled_bwd)
+
+
+def tiled_spmm(x: Array, tb: TiledBalanced, *, block_m: int | None = None,
+               block_o: int | None = None) -> Array:
+    """Differentiable balanced-sparse matmul on a *pre-encoded*
+    `TiledBalanced` weight.  x: [..., N] -> [..., O].
+
+    This is the plan-driven entry point (`engine.execute`): the encoding was
+    done once offline, so no per-call id()-keyed cache is consulted.  bm is
+    re-derived from the actual M (a plan's block choice is made at a prefill
+    M hint; decode steps run the same weights at M = batch).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    bm = _pick_block(x2.shape[0], block_m or 128)
+    bo = _pick_block(tb.values.shape[0], block_o or 128)
+    y = _tiled_spmm(x2, tb.values, tb.indices, tb.counts, tb.n_in, tb.bn,
+                    bm, bo)
+    return y.reshape(*lead, tb.values.shape[0])
+
+
+# ---------------------------------------------------------------------------
 # bitmap_spmm: y = x @ W.T, W bitmap-compressed
 # ---------------------------------------------------------------------------
 
@@ -287,8 +379,9 @@ def bitmap_spmm(x: Array, bitmap: Array, packed: Array, offsets: Array, *,
     if impl == "xla":
         y = ref.bitmap_spmm_ref(x2, bitmap, packed)
         return y.reshape(*lead, o)
-    bm = _pick_block(m, 128)
-    bo = _pick_block(o, 128)
+    c = choose_blocks(m, o, n, packed.shape[1], itemsize=x.dtype.itemsize,
+                      kind="bitmap", bn=bn)
+    bm, bo = c.bm, c.bo
     assert n % bn == 0, (n, bn, "pad N before encoding")
     mp, op_ = _round_up(m, bm), _round_up(o, bo)
     xp = jnp.pad(x2, ((0, mp - m), (0, 0)))
@@ -305,5 +398,5 @@ def encode_bitmap(w: Array, *, bn: int = 128, k: int | None = None):
     return bitmap_encode(w, bn, k=k)
 
 
-__all__ = ["balanced_spmm", "bitmap_spmm", "encode_bitmap", "choose_blocks",
-           "BlockChoice"]
+__all__ = ["balanced_spmm", "tiled_spmm", "bitmap_spmm", "encode_bitmap",
+           "choose_blocks", "BlockChoice"]

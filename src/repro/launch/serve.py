@@ -2,52 +2,65 @@
 
 ``python -m repro.launch.serve --arch olmo-1b --smoke --sparsity 0.5``
 
-Demonstrates the paper's deployment story on an LM: weights are
-balanced-pruned offline (equal NZE per output row — the load-balance
-invariant), compressed to the static (values, indices) format, and decode
-matmuls route through the balanced-sparse kernel path.  Reports tokens/s
-dense vs sparse and the compression ratio (bitmap format, Fig.8).
+Demonstrates the paper's deployment story on an LM through the layer-plan
+engine: one offline pass (`engine.plan.plan_transformer`) balanced-prunes
+every projection (equal NZE per output channel — the load-balance
+invariant), picks the per-layer dataflow mode (§V-C) and kernel impl
+(§VI-F), and pre-encodes the weights to the kernel-native format; prefill
+and decode then *execute the plan* — the balanced-sparse kernels run on the
+real token path, asserted via the engine's dispatch stats (no more timing
+dense matmuls on zeroed weights).  Reports tokens/s dense vs sparse, the
+per-layer RIF/RWF/ON_CHIP mode mix and kernel-impl mix, a sparse-vs-
+masked-dense logits parity check, and the compressed weight footprint
+(bitmap format, Fig.8).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs import ARCHS, get_config, get_smoke
 from ..core.compression import compressed_bits
-from ..core.pruning import balanced_prune_rows
-from ..models import build_model
+from ..engine import execute as engine_execute
+from ..engine import plan as engine_plan
 
 
-def greedy_generate(bundle, params, prompt, steps: int, max_len: int):
+def greedy_generate(bundle, params, prompt, steps: int, max_len: int, *,
+                    prefill_fn=None, decode_fn=None):
+    """Greedy decode; pass prejitted fns to keep compile out of timed runs."""
+    prefill_fn = prefill_fn or jax.jit(bundle.prefill)
+    decode_fn = decode_fn or jax.jit(bundle.decode_step)
     b = prompt.shape[0]
     cache = bundle.init_cache(b, max_len)
-    logits, _ = jax.jit(bundle.prefill)(params, {"tokens": prompt})
-    decode = jax.jit(bundle.decode_step)
+    logits, _ = prefill_fn(params, {"tokens": prompt})
     toks = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out = [toks]
     clen = jnp.full((b,), prompt.shape[1], jnp.int32)
     for _ in range(steps):
-        logits, cache = decode(params, {"tokens": toks, "cache_len": clen},
-                               cache)
+        logits, cache = decode_fn(params, {"tokens": toks,
+                                           "cache_len": clen}, cache)
         toks = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         clen = clen + 1
         out.append(toks)
     return jnp.concatenate(out, axis=1)
 
 
-def sparsify_params(params, sparsity: float):
-    """Balanced-prune every >=2-D projection matrix (equal NZE per row)."""
-    def prune(path, p):
-        if p.ndim < 2 or p.shape[-1] < 8 or p.shape[-2] < 8:
-            return p
-        flat = p.reshape(-1, p.shape[-1])
-        pruned, _ = balanced_prune_rows(flat, sparsity)
-        return pruned.reshape(p.shape)
-    return jax.tree_util.tree_map_with_path(prune, params)
+def _parity_check(prefill_fn, sparse_params, ref_params, prompt, *,
+                  tol: float):
+    """Sparse-plan logits must match the masked-dense reference."""
+    logits_s, _ = prefill_fn(sparse_params, {"tokens": prompt})
+    logits_r, _ = prefill_fn(ref_params, {"tokens": prompt})
+    diff = float(jnp.max(jnp.abs(logits_s.astype(jnp.float32)
+                                 - logits_r.astype(jnp.float32))))
+    np.testing.assert_allclose(np.asarray(logits_s, np.float32),
+                               np.asarray(logits_r, np.float32),
+                               rtol=tol, atol=tol)
+    return diff
 
 
 def main(argv=None):
@@ -58,9 +71,18 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-steps", type=int, default=32)
     ap.add_argument("--sparsity", type=float, default=0.5)
+    ap.add_argument("--impl", choices=["auto", "pallas", "xla", "xla_gather"],
+                    default="auto",
+                    help="force the sparse kernel impl (auto: pallas on "
+                         "TPU, xla densify+dot fallback on CPU)")
+    ap.add_argument("--attn-only", action="store_true",
+                    help="plan only the attention projections, not the MLP")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, sparse_serving=True)
+    from ..models import build_model
+    from ..models.api import TRANSFORMER_FAMILIES
     bundle = build_model(cfg)
     params = bundle.init(jax.random.key(0))
     prompt = jax.random.randint(jax.random.key(1),
@@ -68,15 +90,55 @@ def main(argv=None):
                                 cfg.vocab_size)
     max_len = args.prompt_len + args.gen_steps + 1
 
-    # warm up (compile) outside the timed region
-    greedy_generate(bundle, params, prompt, 1, max_len)
+    if cfg.family not in TRANSFORMER_FAMILIES:
+        print(f"[serve] {cfg.family} arch: projection planning not wired "
+              "for this family yet — running dense only")
+        toks = greedy_generate(bundle, params, prompt, args.gen_steps,
+                               max_len)
+        return {"dense": {"sample": toks[0, :8].tolist()}}
 
+    # ---- the offline pass: build the plan once, serve from it ------------
+    plan = engine_plan.plan_transformer(
+        cfg, params, sparsity=args.sparsity,
+        impl=None if args.impl == "auto" else args.impl,
+        include_mlp=not args.attn_only,
+        m_hint=args.batch * args.prompt_len)
+    print(f"[serve] layer plan ({len(plan.layers)} projection groups x "
+          f"{cfg.n_layers} layers):")
+    print(plan.summary())
+    assert plan.sparse_layer_count > 0, \
+        "plan produced no sparse-kernel layers — sparsity below §VI-F " \
+        "thresholds?"
+    sparse_params = {**params, "sparse_plan": plan}
+    ref_params = engine_plan.masked_dense_params(params, plan)
+
+    # one jitted pair shared by the parity check and both throughput modes:
+    # jax.jit caches per argument pytree structure, so dense, masked-dense
+    # ref, and plan-carrying sparse params each compile exactly once
+    prefill_fn = jax.jit(bundle.prefill)
+    decode_fn = jax.jit(bundle.decode_step)
+
+    # ---- correctness: sparse plan == masked dense, and the balanced
+    # kernels are actually on the traced token path ------------------------
+    tol = 1e-4 if jnp.dtype(cfg.compute_dtype) == jnp.float32 else 2e-2
+    engine_execute.reset_stats()
+    diff = _parity_check(prefill_fn, sparse_params, ref_params, prompt,
+                         tol=tol)
+    stats = engine_execute.stats()
+    assert stats.get("balanced_spmm", 0) > 0, \
+        f"balanced_spmm never dispatched — sparse path is a no-op ({stats})"
+    print(f"[serve] parity sparse vs masked-dense: max |dlogit| = {diff:.2e}"
+          f" (tol {tol:g});  engine dispatches: {stats}")
+
+    # ---- throughput: dense vs plan-driven sparse -------------------------
     results = {}
-    for mode in ("dense", "sparse"):
-        p = sparsify_params(params, args.sparsity) if mode == "sparse" \
-            else params
+    for mode, p in (("dense", params), ("sparse", sparse_params)):
+        # warm up (compile) outside the timed region
+        greedy_generate(bundle, p, prompt, 1, max_len,
+                        prefill_fn=prefill_fn, decode_fn=decode_fn)
         t0 = time.monotonic()
-        toks = greedy_generate(bundle, p, prompt, args.gen_steps, max_len)
+        toks = greedy_generate(bundle, p, prompt, args.gen_steps, max_len,
+                               prefill_fn=prefill_fn, decode_fn=decode_fn)
         jax.block_until_ready(toks)
         dt = time.monotonic() - t0
         tps = args.batch * args.gen_steps / dt
@@ -84,16 +146,24 @@ def main(argv=None):
                          "sample": toks[0, :8].tolist()}
         print(f"[serve/{mode}] {tps:.1f} tok/s ({dt:.2f}s)")
 
-    # storage story: bitmap-compressed weight footprint (paper Fig.8)
+    # ---- storage story: compressed weight footprint (paper Fig.8) --------
     total_numel = total_nnz = 0
-    for p in jax.tree.leaves(sparsify_params(params, args.sparsity)):
-        if p.ndim >= 2:
-            total_numel += p.size
-            total_nnz += int(jnp.sum(p != 0))
+    for lp in plan.layers.values():
+        s = lp.spec
+        layers = cfg.n_layers
+        total_numel += s.n_in * s.n_out * layers
+        total_nnz += s.k * s.n_out * layers
     dense_bits = total_numel * 16
     comp_bits = compressed_bits(total_numel, total_nnz, elem_bits=16)
-    print(f"[serve] weight sparsity {1-total_nnz/max(total_numel,1):.2f}, "
-          f"bitmap compression {dense_bits/comp_bits:.2f}x")
+    results["plan"] = {
+        "mode_mix": plan.mode_mix(), "impl_mix": plan.impl_mix(),
+        "sparse_layers": plan.sparse_layer_count,
+        "parity_max_abs_diff": diff, "engine_stats": stats,
+    }
+    print(f"[serve] planned weight sparsity "
+          f"{1 - total_nnz / max(total_numel, 1):.2f}, "
+          f"bitmap compression {dense_bits / comp_bits:.2f}x;  "
+          f"dataflow mode mix {plan.mode_mix()}")
     return results
 
 

@@ -64,10 +64,15 @@ def register_family(name: str):
     return deco
 
 
+# families served by models/transformer.py — the archs whose stacked 2-D
+# projections the layer-plan engine can prune (engine.plan.plan_transformer)
+TRANSFORMER_FAMILIES = ("dense", "audio", "vlm", "moe")
+
+
 def build_model(cfg: ModelConfig, mesh=None) -> ModelBundle:
     # import for side-effect registration
     from . import transformer, rwkv6, zamba2  # noqa: F401
-    if cfg.family in ("dense", "audio", "vlm", "moe"):
+    if cfg.family in TRANSFORMER_FAMILIES:
         key = "transformer"
     elif cfg.family == "ssm":
         key = "rwkv6"

@@ -210,92 +210,37 @@ def smallcnn_init(cfg: SmallCNNConfig, rng: Array) -> dict:
     return params
 
 
-def _mask_block_k(mask2d, bn: int = 128) -> int:
-    """Static per-bn-block NZE capacity from a concrete mask [O, N].
-
-    Computed at the coarsest kernel block width (128); the autotuner only
-    ever picks power-of-two bn <= 128, and those blocks nest, so this is a
-    valid capacity for any finer partition.
-    """
-    import numpy as np
-    m = np.asarray(mask2d) != 0
-    o, n = m.shape
-    nb = -(-n // bn)
-    pad = nb * bn - n
-    if pad:
-        m = np.pad(m, ((0, 0), (0, pad)))
-    return int(m.reshape(o, nb, bn).sum(axis=2).max())
-
-
-def _balanced_mask_k(mask2d) -> int | None:
-    """Per-row NZE count if the mask is load-balanced, else None."""
-    import numpy as np
-    counts = np.count_nonzero(np.asarray(mask2d), axis=1)
-    if counts.size and (counts == counts[0]).all() and counts[0] > 0:
-        return int(counts[0])
-    return None
-
-
 def smallcnn_apply(cfg: SmallCNNConfig, params: dict, x: Array, *,
-                   masks: dict | None = None, impl: str = "xla") -> Array:
+                   masks: dict | None = None, impl: str | None = "xla",
+                   plan=None) -> Array:
     """x: [B, H, W, 3] -> logits [B, n_classes].
 
     ``masks`` (same keys) are applied multiplicatively — the Sense pruning
-    masks.  Conv layers run through the chunked-im2col sparse conv path
-    when a mask is present; FC layers run through the balanced-sparse
-    kernel path whenever their mask is load-balanced (random/global FC
-    pruning is unbalanced and stays on the dense matmul).  Per-block
-    capacities for the tile-local format are measured from the concrete
-    masks so jitted training steps avoid the conservative min(K, bn) bound.
+    masks.  All dispatch decisions (balanced-vs-dense, kernel impl, block
+    sizes, per-block capacities measured from the concrete masks) are made
+    by the layer-plan engine: conv layers with balanced masks run through
+    the chunked-im2col sparse conv path, balanced fc masks through the
+    balanced-sparse GEMM, everything else stays on the dense ops
+    (random/global FC pruning is unbalanced by construction).  Pass a
+    prebuilt ``plan`` (`engine.plan.plan_smallcnn`) to skip plan
+    construction — e.g. an eager eval loop reusing one offline pass;
+    otherwise the plan is derived here (mask structure is concrete even
+    under jit, so this traces fine inside a training step).
     """
-    from ..core.sparse_ops import sparse_conv2d
-    from ..core.pruning import to_balanced_sparse
-    from .layers import sparse_linear
-
-    def w_of(name):
-        w = params[name]
-        if masks and name in masks:
-            w = w * masks[name]
-        return w
+    from ..engine.execute import apply_conv, apply_fc
+    from ..engine.plan import plan_smallcnn
+    if plan is None:
+        plan = plan_smallcnn(cfg, params, masks, impl=impl)
 
     h = x
     for i in range(len(cfg.channels)):
-        w = w_of(f"conv{i}")                     # [Co, Ci, Hk, Wk]
-        co = w.shape[0]
-        bal_k = None
-        if masks and f"conv{i}" in masks:
-            import numpy as np
-            mask2d = np.asarray(masks[f"conv{i}"]).reshape(co, -1)
-            # balanced format needs equal per-kernel NZE counts; an
-            # unbalanced conv mask (not produced by balanced_prune_conv,
-            # but callers can pass anything) falls back to dense.
-            bal_k = _balanced_mask_k(mask2d)
-        if bal_k is not None:
-            sp = to_balanced_sparse(w.reshape(co, -1), k=bal_k)
-            h = sparse_conv2d(h, sp, hk=cfg.kernel, wk=cfg.kernel,
-                              padding="SAME", impl=impl,
-                              block_k=_mask_block_k(mask2d))
-        else:
-            h = jax.lax.conv_general_dilated(
-                h, w.transpose(2, 3, 1, 0), (1, 1), "SAME",
-                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = apply_conv(h, plan.layers[f"conv{i}"])
         h = jax.nn.relu(h)
         h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                                   (1, 2, 2, 1), "VALID")
     h = h.reshape(h.shape[0], -1)
-    for name, act in (("fc1", jax.nn.relu), ("fc2", None)):
-        w = w_of(name)
-        bal_k = _balanced_mask_k(masks[name]) if masks and name in masks \
-            else None
-        if bal_k is not None:
-            sp = to_balanced_sparse(w, k=bal_k)
-            h = sparse_linear(h, sp, impl=impl,
-                              block_k=_mask_block_k(masks[name]))
-        else:
-            h = h @ w.T
-        if act is not None:
-            h = act(h)
-    return h
+    h = jax.nn.relu(apply_fc(h, plan.layers["fc1"]))
+    return apply_fc(h, plan.layers["fc2"])
 
 
 def smallcnn_loss(cfg: SmallCNNConfig, params: dict, batch: dict, *,

@@ -92,8 +92,11 @@ def blocked_causal_attention(q: Array, k: Array, v: Array, *,
 
     Online softmax over kv chunks inside a scan over q chunks; peak score
     memory is [B, KH, G, q_chunk, kv_chunk].  Chunks must divide S (caller
-    pads); fully-masked kv chunks are still visited (static grid) — the
-    ~2x causal overcompute is a recorded perf-iteration target.
+    pads).  Fully-masked kv chunks (first kv position past the q block's
+    last position) are skipped via ``lax.cond`` — the scan grid is still
+    static, but the dead branch does no FLOPs, removing the ~2x causal
+    prefill overcompute.  ``lax.cond`` stays reverse-differentiable, so the
+    training path keeps its gradients.
 
     Distribution: with a mesh, the q-chunk position dim is sharded over
     ``model`` (query-sequence-parallel).  This is head-count agnostic — it
@@ -146,8 +149,7 @@ def blocked_causal_attention(q: Array, k: Array, v: Array, *,
         l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, kh, g, q_chunk, dh), jnp.float32)
 
-        def kv_block(acc, inp2):
-            ki, kc, vc = inp2
+        def kv_compute(acc, ki, kc, vc):
             m, l, a = acc
             sc = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
                             preferred_element_type=jnp.float32) * scale
@@ -166,7 +168,20 @@ def blocked_causal_attention(q: Array, k: Array, v: Array, *,
             pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc,
                             preferred_element_type=jnp.float32)
             a = a * corr[..., None] + pv
-            return (m_new, l, a), None
+            return m_new, l, a
+
+        def kv_block(acc, inp2):
+            ki, kc, vc = inp2
+            if causal:
+                # kv chunk visible iff its first position <= the q block's
+                # last; otherwise every score is masked and the chunk is a
+                # no-op — skip the whole compute
+                visible = ki * kv_chunk <= qi * q_chunk + (q_chunk - 1)
+                acc = jax.lax.cond(visible, kv_compute,
+                                   lambda acc, *_: acc, acc, ki, kc, vc)
+            else:
+                acc = kv_compute(acc, ki, kc, vc)
+            return acc, None
 
         (m, l, a), _ = jax.lax.scan(
             kv_block, (m0, l0, a0),
@@ -211,15 +226,15 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
 
 def sparse_linear(x: Array, sp, *, impl: str = "pallas",
                   block_k: int | None = None) -> Array:
-    """Balanced-sparse projection ``y = x @ W.T`` with W in the Sense
-    K-per-row format (`core.pruning.BalancedSparse`).
+    """Balanced-sparse projection ``y = x @ W.T``.
 
-    Routes through the tiled decode-and-matmul kernel path
-    (`kernels.ops.balanced_spmm`); ``block_k`` pins the tile-local format's
-    static per-block capacity when the pruning pattern is known at trace
-    time (pass the per-bn-block max NZE count measured from the mask).
-    This is the serving-path primitive for ``cfg.sparse_serving`` models
-    and the FC layers of the CNN zoo.
+    ``sp`` is either an `engine.plan.LayerPlan` (the plan-driven path:
+    dataflow mode, impl, blocks and encoding were all fixed offline —
+    ``impl``/``block_k`` here are ignored) or a flat
+    `core.pruning.BalancedSparse` (ad-hoc kernel path).
+    `core.sparse_ops.sparse_matmul` performs the dispatch.  This is the
+    serving-path primitive for ``cfg.sparse_serving`` models and the FC
+    layers of the CNN zoo.
     """
     from ..core.sparse_ops import sparse_matmul
     return sparse_matmul(x, sp, impl=impl, block_k=block_k)

@@ -8,10 +8,15 @@ Layer parameters are stacked on a leading L axis and walked with
 ``lax.scan`` (+ remat) so compile cost is depth-independent; activations are
 annotated with sequence-parallel sharding between layers (DESIGN.md §5).
 
-Sense integration: when ``cfg.sparse_serving`` the prefill/decode paths run
-the projections through the balanced-sparse kernel path
-(``core.sparse_ops.mode_switched_matmul``); training stays dense (the paper
-prunes *for inference*; the prune->retrain loop lives in core.pruning).
+Sense integration: when ``cfg.sparse_serving`` and the caller has attached
+an offline-built projection plan (``params["sparse_plan"]``, an
+`engine.plan.ModelPlan` from `engine.plan.plan_transformer`), the prefill
+*and* decode paths run every planned projection through the balanced-sparse
+kernel path (`engine.execute.apply_fc` — weights pre-encoded at plan time,
+impl/blocks fixed per layer).  The plan's stacked [L, ...] leaves are
+scanned alongside ``params["blocks"]``, so compile cost stays
+depth-independent.  Training stays dense (the paper prunes *for
+inference*; the prune->retrain loop lives in core.pruning).
 """
 from __future__ import annotations
 
@@ -219,17 +224,28 @@ def gather_for_use(cfg: ModelConfig, mesh, lp: Dict[str, Array],
 # Block forward
 # ---------------------------------------------------------------------------
 
+def _proj(lp, plan_layers, name: str, x: Array, cd) -> Array:
+    """One projection: plan-driven balanced-sparse kernel when the layer is
+    planned, dense matmul otherwise.  Plan weights are stored output-major
+    ([O, N] = W.T), so apply_fc computes the same x @ W."""
+    if plan_layers is not None and name in plan_layers:
+        from ..engine.execute import apply_fc
+        return apply_fc(x, plan_layers[name]).astype(cd)
+    return x @ lp[name].astype(cd)
+
+
 def _attn(cfg: ModelConfig, lp, h: Array, positions: Array, mesh,
-          kv_override=None, cache_len=None) -> tuple:
+          kv_override=None, cache_len=None, plan_layers=None) -> tuple:
     """Attention sublayer.  Returns (out, (k, v)) — k/v for cache building.
 
     kv_override: (k_cache, v_cache, cache_len) for decode."""
     b, s, _ = h.shape
     dh, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
-    x = _norm(cfg, h, lp["attn_norm"]).astype(_cdtype(cfg))
-    q = (x @ lp["wq"].astype(_cdtype(cfg))).reshape(b, s, nh, dh)
-    k = (x @ lp["wk"].astype(_cdtype(cfg))).reshape(b, s, nkv, dh)
-    v = (x @ lp["wv"].astype(_cdtype(cfg))).reshape(b, s, nkv, dh)
+    cd = _cdtype(cfg)
+    x = _norm(cfg, h, lp["attn_norm"]).astype(cd)
+    q = _proj(lp, plan_layers, "wq", x, cd).reshape(b, s, nh, dh)
+    k = _proj(lp, plan_layers, "wk", x, cd).reshape(b, s, nkv, dh)
+    v = _proj(lp, plan_layers, "wv", x, cd).reshape(b, s, nkv, dh)
     if cfg.qk_norm:
         q = rms_norm(q, lp["q_norm"])
         k = rms_norm(k, lp["k_norm"])
@@ -272,17 +288,18 @@ def _attn(cfg: ModelConfig, lp, h: Array, positions: Array, mesh,
                                      kv_chunk=max(kv_chunk, 1), mesh=mesh)
         kv_out = (k, v)
     o = o.reshape(b, s, nh * dh)
-    return o @ lp["wo"].astype(_cdtype(cfg)), kv_out
+    return _proj(lp, plan_layers, "wo", o, cd), kv_out
 
 
-def _mlp(cfg: ModelConfig, lp, h: Array) -> Array:
-    x = _norm(cfg, h, lp["mlp_norm"]).astype(_cdtype(cfg))
+def _mlp(cfg: ModelConfig, lp, h: Array, plan_layers=None) -> Array:
     cd = _cdtype(cfg)
+    x = _norm(cfg, h, lp["mlp_norm"]).astype(cd)
     if cfg.mlp == "swiglu":
-        g = jax.nn.silu(x @ lp["w_gate"].astype(cd)) * (x @ lp["w_up"].astype(cd))
-        return g @ lp["w_down"].astype(cd)
-    g = jax.nn.gelu(x @ lp["w_in"].astype(cd), approximate=True)
-    return g @ lp["w_out"].astype(cd)
+        g = jax.nn.silu(_proj(lp, plan_layers, "w_gate", x, cd)) \
+            * _proj(lp, plan_layers, "w_up", x, cd)
+        return _proj(lp, plan_layers, "w_down", g, cd)
+    g = jax.nn.gelu(_proj(lp, plan_layers, "w_in", x, cd), approximate=True)
+    return _proj(lp, plan_layers, "w_out", g, cd)
 
 
 def _moe(cfg: ModelConfig, lp, h: Array, mesh) -> tuple:
@@ -358,14 +375,16 @@ def _moe_tokens(cfg: ModelConfig, lp, xf: Array, mesh) -> tuple:
 
 
 def _block(cfg: ModelConfig, mesh, h: Array, lp, positions: Array,
-           kv_override=None):
+           kv_override=None, plan_layers=None):
     """One transformer block. Returns (h, (k, v), aux_loss)."""
-    attn_out, kv = _attn(cfg, lp, h, positions, mesh, kv_override=kv_override)
+    attn_out, kv = _attn(cfg, lp, h, positions, mesh, kv_override=kv_override,
+                         plan_layers=plan_layers)
     h = h + attn_out.astype(h.dtype)
     if cfg.family == "moe":
         mlp_out, aux = _moe(cfg, lp, h, mesh)
     else:
-        mlp_out, aux = _mlp(cfg, lp, h), jnp.float32(0.0)
+        mlp_out, aux = _mlp(cfg, lp, h, plan_layers=plan_layers), \
+            jnp.float32(0.0)
     h = h + mlp_out.astype(h.dtype)
     if mesh is not None and kv_override is None:
         h = shd.with_hidden_sharding(mesh, h)
@@ -404,6 +423,13 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
             return lp
         return gather_for_use(cfg, mesh, lp, uspecs)
 
+    def _serving_plan(params):
+        """The offline projection plan, when sparse serving is on and the
+        caller attached one (`launch/serve.py`).  Training ignores it."""
+        if cfg.sparse_serving and isinstance(params, dict):
+            return params.get("sparse_plan")
+        return None
+
     def init(rng):
         return init_params(cfg, rng)
 
@@ -438,13 +464,18 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
         b, s = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         h = _embed_tokens(cfg, params, batch, mesh)
+        plan = _serving_plan(params)
 
-        def body(carry, lp):
+        def body(carry, xs):
+            lp, plp = xs if plan is not None else (xs, None)
             h, = carry
-            h, (k, v), _ = _block(cfg, mesh, h, lp, positions)
+            h, (k, v), _ = _block(cfg, mesh, h, lp, positions,
+                                  plan_layers=plp)
             return (h,), (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
         body_fn = jax.checkpoint(body, policy=remat_policy) if cfg.remat else body
-        (h,), (ks, vs) = jax.lax.scan(body_fn, (h,), params["blocks"])
+        xs = (params["blocks"], plan.layers) if plan is not None \
+            else params["blocks"]
+        (h,), (ks, vs) = jax.lax.scan(body_fn, (h,), xs)
         h = _norm(cfg, h, params["final_norm"])
         logits = (h[:, -1].astype(jnp.float32)
                   @ params["embed"].astype(jnp.float32).T)
@@ -461,14 +492,21 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
         b = tokens.shape[0]
         positions = clen[:, None]
         h = _embed_tokens(cfg, params, batch, mesh)
+        plan = _serving_plan(params)
 
         def body(h, xs):
-            lp, kc, vc = xs
+            if plan is not None:
+                lp, kc, vc, plp = xs
+            else:
+                (lp, kc, vc), plp = xs, None
             h, (kc, vc), _ = _block(cfg, mesh, h, lp, positions,
-                                    kv_override=(kc, vc, clen))
+                                    kv_override=(kc, vc, clen),
+                                    plan_layers=plp)
             return h, (kc, vc)
-        h, (ks, vs) = jax.lax.scan(body, h,
-                                   (params["blocks"], cache["k"], cache["v"]))
+        xs = (params["blocks"], cache["k"], cache["v"])
+        if plan is not None:
+            xs = xs + (plan.layers,)
+        h, (ks, vs) = jax.lax.scan(body, h, xs)
         h = _norm(cfg, h, params["final_norm"])
         logits = (h[:, -1].astype(jnp.float32)
                   @ params["embed"].astype(jnp.float32).T)

@@ -1,0 +1,215 @@
+"""Layer-plan engine: pytree/checkpoint round-trips, plan-vs-masked-dense
+parity on the small CNN and the smoke transformer, the Fig.22b dataflow
+mode-mix regression, and the no-call-time-cache contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pruning import (balanced_prune_conv, balanced_prune_rows,
+                                random_prune)
+from repro.engine import execute as engine_execute
+from repro.engine import plan as engine_plan
+
+
+def _fc_plan(key=0, o=48, n=96, sparsity=0.6, **kw):
+    w = jax.random.normal(jax.random.key(key), (o, n))
+    _, mask = balanced_prune_rows(w, sparsity)
+    return w, mask, engine_plan.build_layer_plan("fc", w, mask=mask,
+                                                 m_hint=32, **kw)
+
+
+# ---------------------------------------------------------------------------
+# ModelPlan as a pytree / checkpoint artifact
+# ---------------------------------------------------------------------------
+
+def test_model_plan_pytree_roundtrip():
+    w, mask, lp_xla = _fc_plan(impl="xla")
+    _, _, lp_pal = _fc_plan(key=1, impl="pallas")
+    mp = engine_plan.ModelPlan(layers={"a": lp_xla, "b": lp_pal},
+                               meta=(("model", "test"),))
+    leaves, treedef = jax.tree_util.tree_flatten(mp)
+    mp2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert mp2.layers.keys() == mp.layers.keys()
+    for k in mp.layers:
+        assert mp2.layers[k].spec == mp.layers[k].spec
+    # static decisions are jit aux data: a plan-typed argument traces
+    x = jax.random.normal(jax.random.key(2), (5, 96))
+    y = jax.jit(lambda p, x: engine_execute.apply_named(x, p, "a"))(mp2, x)
+    want = x @ (w * mask).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_model_plan_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.store import restore_checkpoint, save_checkpoint
+    _, _, lp_xla = _fc_plan(impl="xla")
+    _, _, lp_pal = _fc_plan(key=1, impl="pallas")
+    mp = engine_plan.ModelPlan(layers={"a": lp_xla, "b": lp_pal},
+                               meta=(("sparsity", 0.6),))
+    save_checkpoint(tmp_path, 7, mp, extra={"note": "plan"})
+    got, extra = restore_checkpoint(tmp_path, 7, mp)
+    assert extra == {"note": "plan"}
+    for l1, l2 in zip(jax.tree.leaves(mp), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=0)
+    # aux (the frozen PlanSpec decisions) survives via the tree structure
+    assert got.layers["b"].spec == mp.layers["b"].spec
+    assert got.meta == mp.meta
+
+
+def test_plan_path_skips_encoding_caches():
+    """Acceptance: the id()-keyed weakref caches in kernels/ops.py are off
+    the plan-driven path — plans carry pre-encoded weights."""
+    from repro.kernels import ops
+    ops._ENC_CACHE.clear()
+    ops._KB_CACHE.clear()
+    _, _, lp = _fc_plan(impl="pallas")
+    x = jax.random.normal(jax.random.key(3), (9, 96))
+    jax.block_until_ready(engine_execute.apply_fc(x, lp))
+    assert not ops._ENC_CACHE and not ops._KB_CACHE
+    # ...while the eager ad-hoc balanced_spmm entry point still works
+    from repro.core.pruning import to_balanced_sparse
+    sp = to_balanced_sparse(jax.random.normal(jax.random.key(4), (16, 64)),
+                            k=8)
+    y = ops.balanced_spmm(x[:, :64], sp.values, sp.indices, n_in=64,
+                          impl="pallas")
+    assert y.shape == (9, 16)
+
+
+def test_engine_stats_counters():
+    engine_execute.reset_stats()
+    _, _, lp = _fc_plan(impl="xla")
+    x = jax.random.normal(jax.random.key(5), (4, 96))
+    engine_execute.apply_fc(x, lp)
+    s = engine_execute.stats()
+    assert s["balanced_spmm"] == 1 and s["impl_xla"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Plan-vs-masked-dense parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_smallcnn_plan_matches_masked_dense(impl):
+    from repro.models.cnn import SmallCNNConfig, smallcnn_apply, smallcnn_init
+    cfg = SmallCNNConfig()
+    params = smallcnn_init(cfg, jax.random.key(0))
+    masks = {}
+    for i in range(len(cfg.channels)):
+        _, masks[f"conv{i}"] = balanced_prune_conv(params[f"conv{i}"], 0.5)
+    _, masks["fc1"] = balanced_prune_rows(params["fc1"], 0.8)  # balanced fc
+    _, masks["fc2"] = random_prune(params["fc2"], 0.8)         # unbalanced
+    x = jax.random.normal(jax.random.key(1), (4, 32, 32, 3))
+    got = smallcnn_apply(cfg, params, x, masks=masks, impl=impl)
+    mparams = {k: (v * masks[k] if k in masks else v)
+               for k, v in params.items()}
+    want = smallcnn_apply(cfg, mparams, x, masks=None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # the plan really used sparse kernels for the balanced layers
+    plan = engine_plan.plan_smallcnn(cfg, params, masks, impl=impl)
+    assert plan.layers["conv0"].spec.impl == impl
+    assert plan.layers["fc1"].spec.impl == impl
+    assert plan.layers["fc2"].spec.impl == "dense"   # unbalanced mask
+
+
+def test_smallcnn_plan_grads_trainable_under_jit():
+    """The plan path must stay differentiable inside a jitted train step
+    (mask structure concrete, values traced)."""
+    from repro.models.cnn import SmallCNNConfig, smallcnn_init, smallcnn_loss
+    cfg = SmallCNNConfig(channels=(8, 16), img=16, fc_hidden=32)
+    params = smallcnn_init(cfg, jax.random.key(0))
+    masks = {}
+    for i in range(len(cfg.channels)):
+        _, masks[f"conv{i}"] = balanced_prune_conv(params[f"conv{i}"], 0.5)
+    batch = {"image": jax.random.normal(jax.random.key(1), (2, 16, 16, 3)),
+             "label": jnp.zeros((2,), jnp.int32)}
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: smallcnn_loss(cfg, p, batch, masks=masks)))(params)
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g, np.float32)).all()
+
+
+def test_transformer_plan_matches_masked_dense():
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    cfg = dataclasses.replace(get_smoke("olmo-1b"), sparse_serving=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    plan = engine_plan.plan_transformer(cfg, params, sparsity=0.5)
+    assert plan.sparse_layer_count > 0
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                cfg.vocab_size)
+    sparse_params = {**params, "sparse_plan": plan}
+    ref_params = engine_plan.masked_dense_params(params, plan)
+
+    engine_execute.reset_stats()
+    logits_s, cache_s = jax.jit(m.prefill)(sparse_params, {"tokens": tokens})
+    assert engine_execute.stats().get("balanced_spmm", 0) > 0
+    logits_r, cache_r = jax.jit(m.prefill)(ref_params, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(logits_s), np.asarray(logits_r),
+                               rtol=2e-2, atol=2e-2)
+
+    # decode: same cache prefix, one step, same logits
+    cache = m.init_cache(2, 24)
+    cache["k"] = cache["k"].at[:, :, :16].set(cache_s["k"])
+    cache["v"] = cache["v"].at[:, :, :16].set(cache_s["v"])
+    batch = {"tokens": tokens[:, :1],
+             "cache_len": jnp.full((2,), 16, jnp.int32)}
+    ld_s, _ = jax.jit(m.decode_step)(sparse_params, batch, cache)
+    cache2 = m.init_cache(2, 24)
+    cache2["k"] = cache2["k"].at[:, :, :16].set(cache_r["k"])
+    cache2["v"] = cache2["v"].at[:, :, :16].set(cache_r["v"])
+    ld_r, _ = jax.jit(m.decode_step)(ref_params, batch, cache2)
+    np.testing.assert_allclose(np.asarray(ld_s), np.asarray(ld_r),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_serve_smoke_sparse_path_end_to_end():
+    """The acceptance gate in-tree: serve executes the balanced-sparse
+    kernels (plan stats > 0) and reports the dataflow mode mix."""
+    from repro.launch import serve
+    results = serve.main(["--arch", "olmo-1b", "--smoke", "--batch", "2",
+                          "--prompt-len", "16", "--gen-steps", "2",
+                          "--sparsity", "0.5"])
+    assert results["plan"]["sparse_layers"] > 0
+    assert results["plan"]["engine_stats"].get("balanced_spmm", 0) > 0
+    assert "ON_CHIP" in results["plan"]["mode_mix"]
+    assert results["sparse"]["tokens_per_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Fig.22b — per-layer RIF/RWF mode mix on the paper networks
+# ---------------------------------------------------------------------------
+
+def test_fig22b_mode_mix_regression():
+    """Pin the adaptive dataflow's per-layer mode mix (frac_rwf) and the
+    DRAM reduction vs fixed-RIF on the four paper networks."""
+    from repro.core.dataflow import network_dram_access
+    from repro.core.systolic import SystolicConfig
+    from repro.models.cnn import network_layers
+    cfg = SystolicConfig()
+    expect = {
+        # net: (n_layers, frac_rwf, min_reduction_vs_fixed_rif)
+        "alexnet": (8, 3 / 8, 1.23),
+        "vgg16": (16, 6 / 16, 1.88),
+        "resnet50": (54, 0.0, 1.0),
+        "googlenet": (58, 0.0, 1.0),
+    }
+    for net, (n_layers, frac_rwf, min_red) in expect.items():
+        layers = network_layers(net, "sense")
+        assert len(layers) == n_layers
+        a = network_dram_access(layers, adaptive=True, n_is=cfg.n_is,
+                                n_pe=cfg.n_pe,
+                                weight_buffer_bits=cfg.weight_buffer_bits)
+        f = network_dram_access(layers, adaptive=False, n_is=cfg.n_is,
+                                n_pe=cfg.n_pe,
+                                weight_buffer_bits=cfg.weight_buffer_bits)
+        assert a["frac_rwf"] == pytest.approx(frac_rwf), net
+        red = f["total_bits"] / a["total_bits"]
+        assert red >= min_red, (net, red)
+        # adaptive never loses to the fixed dataflow (it subsumes it)
+        assert a["total_bits"] <= f["total_bits"], net

@@ -1,0 +1,33 @@
+"""Register benchmarks/kernel_bench.py --smoke as a slow-marked pytest: the
+<60 s perf/parity regression gate runs under tier-1 (and selectable with
+``-m slow``)."""
+import importlib.util
+import pathlib
+
+import pytest
+
+_BENCH = (pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+          / "kernel_bench.py")
+
+
+def _load_kernel_bench():
+    spec = importlib.util.spec_from_file_location("kernel_bench", _BENCH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.slow
+def test_kernel_bench_smoke_gate(tmp_path):
+    """Smoke bench must pass its parity gate (rc 0) and write a report with
+    the tiled-vs-seed comparison for every network."""
+    kb = _load_kernel_bench()
+    out = tmp_path / "bench.json"
+    rc = kb.main(["--smoke", "--out", str(out)])
+    assert rc == 0
+    import json
+    report = json.loads(out.read_text())
+    assert report["meta"]["mode"] == "smoke"
+    for net in ("alexnet", "vgg16", "resnet50"):
+        assert report["networks"][net]["pallas_all_ok"]
+        assert report["networks"][net]["layers"]

@@ -100,6 +100,43 @@ def test_param_count_close_to_published(arch):
     assert 0.5 * plate < got < 1.6 * plate, (got, plate)
 
 
+@pytest.mark.parametrize("q_chunk,kv_chunk", [(16, 16), (8, 32), (32, 8)])
+def test_causal_attention_chunk_skip_parity(q_chunk, kv_chunk):
+    """Skipping fully-masked kv chunks (lax.cond) must match the
+    visit-everything reference exactly, for any chunk aspect ratio, and
+    stay differentiable."""
+    import math
+    from repro.models.layers import blocked_causal_attention
+
+    def naive(q, k, v, causal):
+        b, s, h, dh = q.shape
+        kh = k.shape[2]
+        qg = q.reshape(b, s, kh, h // kh, dh)
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / math.sqrt(dh)
+        if causal:
+            mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+            sc = jnp.where(mask[None, None, None], sc, -jnp.inf)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v)
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh)
+
+    b, s, h, kh, dh = 2, 64, 4, 2, 8
+    q = jax.random.normal(jax.random.key(0), (b, s, h, dh))
+    k = jax.random.normal(jax.random.key(1), (b, s, kh, dh))
+    v = jax.random.normal(jax.random.key(2), (b, s, kh, dh))
+    for causal in (True, False):
+        got = blocked_causal_attention(q, k, v, q_chunk=q_chunk,
+                                       kv_chunk=kv_chunk, causal=causal)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(naive(q, k, v, causal)),
+                                   rtol=2e-5, atol=2e-5)
+    g = jax.grad(lambda q: jnp.sum(blocked_causal_attention(
+        q, k, v, q_chunk=q_chunk, kv_chunk=kv_chunk) ** 2))(q)
+    gr = jax.grad(lambda q: jnp.sum(naive(q, k, v, True) ** 2))(q)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_musicgen_frontend_positions_masked():
     cfg = get_smoke("musicgen-medium")
     m = build_model(cfg)
