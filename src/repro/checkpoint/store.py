@@ -117,6 +117,11 @@ def restore_checkpoint(root: str | Path, step: int, tree_like, *,
         if meta is None:
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = np.load(d / meta["file"])
+        if str(arr.dtype) != meta["dtype"]:
+            # extension dtypes (bfloat16 & friends) come back from .npy as
+            # raw void bytes — reinterpret to the recorded dtype (same
+            # bytes, so the CRC below still validates)
+            arr = arr.view(jax.numpy.dtype(meta["dtype"]))
         if strict_crc and zlib.crc32(arr.tobytes()) != meta["crc32"]:
             raise IOError(f"CRC mismatch for {key} — corrupt checkpoint")
         sh = flat_sh.get(key)

@@ -10,4 +10,4 @@ SMOKE = ModelConfig(
     name="deepseek-moe-16b-smoke", family="moe", n_layers=2, d_model=64,
     n_heads=4, n_kv_heads=4, d_ff=32, vocab_size=256, head_dim=16,
     n_experts=8, n_shared_experts=1, top_k=2, q_chunk=16, kv_chunk=16,
-    loss_chunk=16)
+    loss_chunk=16, w_sparsity=0.5)

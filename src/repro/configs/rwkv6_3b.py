@@ -7,4 +7,5 @@ CONFIG = ModelConfig(
 
 SMOKE = ModelConfig(
     name="rwkv6-3b-smoke", family="ssm", n_layers=2, d_model=64, d_ff=128,
-    vocab_size=256, rwkv_head_dim=16, rwkv_lora_rank=8, loss_chunk=16)
+    vocab_size=256, rwkv_head_dim=16, rwkv_lora_rank=8, loss_chunk=16,
+    w_sparsity=0.5)

@@ -11,4 +11,4 @@ SMOKE = ModelConfig(
     name="zamba2-1.2b-smoke", family="hybrid", n_layers=4, d_model=64,
     n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256, head_dim=16,
     ssm_state=16, ssm_expand=2, ssm_conv=4, ssm_head_dim=16, attn_every=2,
-    q_chunk=16, kv_chunk=16, loss_chunk=16)
+    q_chunk=16, kv_chunk=16, loss_chunk=16, w_sparsity=0.5)

@@ -28,6 +28,13 @@ def dp_axes(mesh: Mesh) -> tuple:
     return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
 
 
+def fsdp_axes(mesh: Mesh) -> tuple:
+    """Axes parameters are FSDP-sharded over (data first, then pod): the
+    non-TP dim of every large weight — dense *or* plan-encoded — is sharded
+    over these so parameter memory scales with the full chip count."""
+    return tuple(n for n in ("data", "pod") if n in mesh.axis_names)
+
+
 def _axes_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1

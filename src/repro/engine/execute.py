@@ -57,6 +57,39 @@ def apply_fc(x: Array, lp: LayerPlan) -> Array:
                                     impl=spec.impl, block_k=spec.block_k)
 
 
+def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
+    """Per-expert planned projection: x [E, ..., N] -> [E, ..., O].
+
+    ``lp.weights`` carry a leading expert axis (plan built from a rank-3
+    ``[E, d, f]`` MoE tensor, scan-sliced to one layer).  The Pallas impl
+    scans `kernels.ops.tiled_spmm_batched` over E (pre-encoded, decode
+    inside the kernel); the XLA fallbacks scan the flat-format
+    `balanced_spmm` the same way.
+    """
+    spec = lp.spec
+    if spec.impl == "dense":
+        STATS["dense_matmul"] += 1
+        return jnp.einsum("e...n,eon->e...o", x,
+                          lp.weights.astype(x.dtype),
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    STATS["balanced_spmm"] += 1
+    STATS["expert_balanced_spmm"] += 1
+    STATS[f"impl_{spec.impl}"] += 1
+    if spec.impl == "pallas":
+        blk = spec.blocks
+        return kernel_ops.tiled_spmm_batched(x, lp.weights, block_m=blk.bm,
+                                             block_o=blk.bo)
+    sp = lp.weights
+
+    def body(_, xs):
+        xe, ve, ie = xs
+        y = kernel_ops.balanced_spmm(xe, ve, ie, n_in=spec.n_in,
+                                     impl=spec.impl, block_k=spec.block_k)
+        return None, y
+    _, y = jax.lax.scan(body, None, (x, sp.values, sp.indices))
+    return y
+
+
 def apply_conv(x: Array, lp: LayerPlan) -> Array:
     """NHWC convolution for a planned conv layer."""
     spec = lp.spec
@@ -93,9 +126,12 @@ def apply_conv(x: Array, lp: LayerPlan) -> Array:
 
 
 def apply_layer(x: Array, lp: LayerPlan) -> Array:
-    """Shape-directed dispatch: conv plans expect NHWC, fc plans [..., N]."""
+    """Spec-directed dispatch: conv plans expect NHWC, expert plans
+    [E, ..., N], fc plans [..., N]."""
     if lp.spec.kind == "conv":
         return apply_conv(x, lp)
+    if lp.spec.experts:
+        return apply_expert_fc(x, lp)
     return apply_fc(x, lp)
 
 
@@ -103,5 +139,5 @@ def apply_named(x: Array, plan: ModelPlan, name: str) -> Array:
     return apply_layer(x, plan.layers[name])
 
 
-__all__ = ["apply_fc", "apply_conv", "apply_layer", "apply_named",
-           "stats", "reset_stats", "STATS"]
+__all__ = ["apply_fc", "apply_expert_fc", "apply_conv", "apply_layer",
+           "apply_named", "stats", "reset_stats", "STATS"]

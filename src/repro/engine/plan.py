@@ -29,6 +29,14 @@ Pattern vs values: plan construction requires the sparsity *pattern*
 (mask / indices) to be concrete — patterns freeze at prune time — but the
 *values* may be jit tracers, so `plan_smallcnn` can run inside a jitted,
 differentiated training step while the mask-derived structure stays static.
+
+Coverage (`plan_model` dispatches by family): transformer attention/MLP
+projections, MoE expert tensors ([L, E, d, f] with per-expert encodings
+sharing one BlockChoice), MoE shared-expert projections, the RWKV6
+R/K/V/G/O + channel-mix family, and the Zamba2 Mamba-block in/out
+projections.  `plan_specs`/`shard_plan` give the encoded leaves real
+PartitionSpecs (FSDP over output channels, expert-parallel over E) instead
+of replicating them.
 """
 from __future__ import annotations
 
@@ -40,8 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.dataflow import LayerSpec, choose_dataflow
-from ..core.pruning import (BalancedSparse, balanced_prune_rows, from_mask,
-                            keep_count)
+from ..core.pruning import BalancedSparse, keep_count
 from ..core.sparse_ops import SparseLinearSpec
 from ..kernels import ops as kernel_ops
 from ..kernels.tile_format import (_KB_ROUND, _round_up, TiledBalanced,
@@ -113,6 +120,8 @@ class PlanSpec:
     wk: int = 1
     stride: int = 1
     conv_padding: Any = "SAME"      # "SAME" | "VALID" | int
+    experts: int = 0                # per-layer expert count (MoE tensors);
+                                    # 0 = plain stacked projection
 
     @property
     def is_sparse(self) -> bool:
@@ -140,21 +149,32 @@ class LayerPlan:
 
     def dense_weights(self) -> Array:
         """Densify back to [.., O, N] (fc) / the stored 4-D array (conv
-        dense) — the masked-dense reference this plan must match."""
+        dense) — the masked-dense reference this plan must match.  Encoded
+        leaves may carry any number of leading stacked axes ([L, ...] for
+        scanned layers, [L, E, ...] for MoE expert tensors)."""
         w = self.weights
         if isinstance(w, TiledBalanced):
-            if w.values.ndim == 4:      # stacked [L, O, NB, KB]
-                return jnp.stack([
-                    tiled_to_dense(TiledBalanced(w.values[i], w.indices[i],
-                                                 w.counts[i], w.n_in, w.bn))
-                    for i in range(w.values.shape[0])])
+            lead = w.values.shape[:-3]
+            if lead:                    # stacked [*lead, O, NB, KB]
+                vf = w.values.reshape(-1, *w.values.shape[-3:])
+                jf = w.indices.reshape(-1, *w.indices.shape[-3:])
+                cf = w.counts.reshape(-1, *w.counts.shape[-2:])
+                dense = jnp.stack([
+                    tiled_to_dense(TiledBalanced(vf[i], jf[i], cf[i],
+                                                 w.n_in, w.bn))
+                    for i in range(vf.shape[0])])
+                return dense.reshape(*lead, *dense.shape[-2:])
             return tiled_to_dense(w)
         if isinstance(w, BalancedSparse):
             from ..kernels import ref
-            if w.values.ndim == 3:      # stacked [L, O, K]
-                return jnp.stack([
-                    ref.balanced_dense(w.values[i], w.indices[i], w.n_in)
-                    for i in range(w.values.shape[0])])
+            lead = w.values.shape[:-2]
+            if lead:                    # stacked [*lead, O, K]
+                vf = w.values.reshape(-1, *w.values.shape[-2:])
+                jf = w.indices.reshape(-1, *w.indices.shape[-2:])
+                dense = jnp.stack([
+                    ref.balanced_dense(vf[i], jf[i], w.n_in)
+                    for i in range(vf.shape[0])])
+                return dense.reshape(*lead, *dense.shape[-2:])
             return ref.balanced_dense(w.values, w.indices, w.n_in)
         return w
 
@@ -410,33 +430,121 @@ def plan_smallcnn(cfg, params: dict, masks: dict | None = None, *,
     return ModelPlan(layers=layers, meta=(("model", "smallcnn"),))
 
 
-# The transformer projections the planner can prune (stacked [L, n_in,
-# n_out] entries of params["blocks"]); attention projections first, MLP
-# second.  MoE expert tensors are >2-D per layer and stay dense.
+# The projection families the planner can prune, per model family: every
+# entry is a stacked [L, n_in, n_out] (or [L, E, n_in, n_out] for MoE
+# expert tensors) leaf of params["blocks"].
 ATTN_PROJ_NAMES = ("wq", "wk", "wv", "wo")
 MLP_PROJ_NAMES = ("w_gate", "w_up", "w_down", "w_in", "w_out")
+MOE_SHARED_NAMES = ("ws_gate", "ws_up", "ws_down")
+MOE_EXPERT_NAMES = ("we_gate", "we_up", "we_down")
+# RWKV6 (models/rwkv6.py flags these Sense-applicable): time-mix R/K/V/G/O
+# plus the channel-mix matrices; the WKV recurrence stays dense/elementwise.
+RWKV6_PROJ_NAMES = ("wr", "wkm", "wv", "wg", "wo", "ck", "cv", "cr")
+# Zamba2 Mamba-block in/out projections; B/C/dt projections are tiny
+# (d -> ssm_state / nheads) and stay dense, like the paper's non-CONV/FC ops.
+ZAMBA2_PROJ_NAMES = ("z_proj", "x_proj", "out_proj")
+
+
+def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
+                  m_hint: int, cd) -> LayerPlan:
+    """Plan one stacked projection ``[*lead, n_in, n_out]``.
+
+    ``lead`` is any tuple of stacked axes — ``(L,)`` for scanned layers,
+    ``(L, E)`` for MoE expert tensors.  Every slice is transposed to
+    output-major, balanced-pruned along the input dim (equal NZE per output
+    channel — the Sense invariant), encoded to the impl's native format
+    with a *shared* `BlockChoice`/KB across all slices (one static spec for
+    the whole stack), and restacked on the leading axes so `lax.scan` /
+    the expert loop can slice per-layer weights while the spec rides as
+    aux data.
+    """
+    lead = w.shape[:-2]
+    n_in, n_out = w.shape[-2:]
+    g = int(np.prod(lead)) if lead else 1
+    k = keep_count(n_in, sparsity)
+    if impl is None:
+        impl_nm = default_impl(balanced=True, w_sparsity=1.0 - k / n_in)
+    else:
+        impl_nm = impl
+    # All g slices batch through one fused path (the tile layout is per-row
+    # independent, so [g*O, K] encodes in a single pass — no per-slice
+    # device round-trips even at L*E scale): output-major transpose, per-row
+    # top-k prune (same stable tie-breaking as balanced_prune_rows), one
+    # host sync for the pattern.
+    wt = jnp.swapaxes(w.reshape(g, n_in, n_out), -1, -2).astype(cd)
+    order = jnp.argsort(-jnp.abs(wt), axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    masks = np.asarray(ranks < k)                         # [g, O, N] bool
+    if impl_nm == "dense":
+        weights: Any = (wt * masks).reshape(*lead, n_out, n_in)
+        blk = None
+        block_k = 0
+    else:
+        itemsize = cd.itemsize
+        blk = kernel_ops.choose_blocks(m_hint, n_out, n_in, k,
+                                       itemsize=itemsize)
+        block_k = max(_KB_ROUND, _round_up(
+            mask_block_k(masks.reshape(g * n_out, n_in), bn=blk.bn),
+            _KB_ROUND))
+        # nonzero positions ascending per row (the from_mask layout)
+        idx = np.sort(np.argsort(~masks, axis=-1, kind="stable")[..., :k],
+                      axis=-1).astype(np.int32)           # [g, O, K]
+        vals = jnp.take_along_axis(wt, jnp.asarray(idx), axis=-1)
+        if impl_nm == "pallas":
+            tb = encode_tiled(vals.reshape(g * n_out, k),
+                              idx.reshape(g * n_out, k), n_in,
+                              bn=blk.bn, kb=block_k)
+            nb = tb.nb
+            weights = TiledBalanced(
+                tb.values.reshape(*lead, n_out, nb, block_k),
+                tb.indices.reshape(*lead, n_out, nb, block_k),
+                tb.counts.reshape(*lead, n_out, nb),
+                n_in=n_in, bn=blk.bn)
+        else:
+            weights = BalancedSparse(vals.reshape(*lead, n_out, k),
+                                     jnp.asarray(idx).reshape(
+                                         *lead, n_out, k), n_in)
+    flow = choose_dataflow(LayerSpec(name=nm, kind="fc", c_i=n_in,
+                                     c_o=n_out,
+                                     w_sparsity=1.0 - k / n_in))
+    experts = int(lead[1]) if len(lead) > 1 else 0
+    spec = PlanSpec(name=nm, kind="fc", impl=impl_nm, mode=flow.mode,
+                    n_in=n_in, n_out=n_out, k=k, block_k=block_k,
+                    blocks=blk, w_sparsity=1.0 - k / n_in,
+                    d_mem_bits=int(flow.d_mem_bits) * g,
+                    i_mem_bits=int(flow.i_mem) * g,
+                    w_mem_bits=int(flow.w_mem) * g,
+                    experts=experts)
+    return LayerPlan(spec=spec, weights=weights)
+
+
+def _resolve_sparsity(cfg, sparsity: float | None) -> float:
+    sparsity = cfg.w_sparsity if sparsity is None else sparsity
+    if not 0.0 < sparsity < 1.0:
+        raise ValueError(f"need 0 < sparsity < 1, got {sparsity}")
+    return sparsity
 
 
 def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
                      impl: str | None = None, include_mlp: bool = True,
+                     include_experts: bool = True,
                      m_hint: int | None = None) -> ModelPlan:
     """Offline plan for a transformer's projection matrices.
 
-    Each stacked projection ``[L, n_in, n_out]`` is balanced-pruned per
-    layer along the *input* dim (equal NZE per output channel — the Sense
-    invariant), encoded once, and stacked back on the leading L axis so
-    `lax.scan` can slice per-layer weights while the static spec rides as
-    aux data.  Values are cast to ``cfg.compute_dtype`` (what the dense
-    path multiplies in).  GEMV-shaped serving projections are ON_CHIP
-    under §V-C — every weight is read once — so the mode mix here is the
-    paper's FC story; the CNN planners exercise RIF/RWF.
+    Stacked 2-D projections ``[L, n_in, n_out]`` go through `_plan_stacked`;
+    for MoE configs the rank-3 expert tensors ``[E, d, f]`` (stacked
+    ``[L, E, d, f]``) get a per-expert TiledBalanced/BalancedSparse encoding
+    with a shared `BlockChoice`, so the router-selected expert decodes
+    inside the kernel path (`engine.execute.apply_expert_fc`).  GEMV-shaped
+    serving projections are ON_CHIP under §V-C — every weight is read once —
+    so the mode mix here is the paper's FC story; the CNN planners exercise
+    RIF/RWF.
     """
-    sparsity = cfg.w_sparsity if sparsity is None else sparsity
-    if not 0.0 < sparsity < 1.0:
-        raise ValueError(f"need 0 < sparsity < 1, got {sparsity}")
+    sparsity = _resolve_sparsity(cfg, sparsity)
     blocks = params["blocks"]
-    names = [n for n in ATTN_PROJ_NAMES + (MLP_PROJ_NAMES if include_mlp
-                                           else ()) if n in blocks]
+    names = [n for n in ATTN_PROJ_NAMES
+             + ((MLP_PROJ_NAMES + MOE_SHARED_NAMES) if include_mlp else ())
+             if n in blocks]
     cd = jnp.dtype(cfg.compute_dtype)
     m_hint = m_hint or 256
     layers: Dict[str, LayerPlan] = {}
@@ -444,71 +552,163 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
         w = blocks[nm]
         if w.ndim != 3:
             continue
-        l, n_in, n_out = w.shape
-        k = keep_count(n_in, sparsity)
-        if impl is None:
-            impl_nm = default_impl(balanced=True,
-                                   w_sparsity=1.0 - k / n_in)
-        else:
-            impl_nm = impl
-        per = []
-        for li in range(l):
-            wt = jnp.transpose(w[li]).astype(cd)          # [O, N]
-            pruned, mask = balanced_prune_rows(wt, sparsity)
-            per.append((pruned, np.asarray(mask)))
-        if impl_nm == "dense":
-            weights: Any = jnp.stack([p for p, _ in per])
-            blk = None
-            block_k = 0
-        else:
-            itemsize = cd.itemsize
-            blk = kernel_ops.choose_blocks(m_hint, n_out, n_in, k,
-                                           itemsize=itemsize)
-            block_k = max(_KB_ROUND, _round_up(
-                max(mask_block_k(m, bn=blk.bn) for _, m in per), _KB_ROUND))
-            sps = [from_mask(p, jnp.asarray(m)) for p, m in per]
-            if impl_nm == "pallas":
-                tbs = [encode_tiled(s.values.astype(cd), s.indices, n_in,
-                                    bn=blk.bn, kb=block_k) for s in sps]
-                weights = TiledBalanced(
-                    jnp.stack([t.values for t in tbs]),
-                    jnp.stack([t.indices for t in tbs]),
-                    jnp.stack([t.counts for t in tbs]),
-                    n_in=n_in, bn=blk.bn)
-            else:
-                weights = BalancedSparse(
-                    jnp.stack([s.values.astype(cd) for s in sps]),
-                    jnp.stack([s.indices for s in sps]), n_in)
-        flow = choose_dataflow(LayerSpec(name=nm, kind="fc", c_i=n_in,
-                                         c_o=n_out,
-                                         w_sparsity=1.0 - k / n_in))
-        spec = PlanSpec(name=nm, kind="fc", impl=impl_nm, mode=flow.mode,
-                        n_in=n_in, n_out=n_out, k=k, block_k=block_k,
-                        blocks=blk, w_sparsity=1.0 - k / n_in,
-                        d_mem_bits=int(flow.d_mem_bits) * l,
-                        i_mem_bits=int(flow.i_mem) * l,
-                        w_mem_bits=int(flow.w_mem) * l)
-        layers[nm] = LayerPlan(spec=spec, weights=weights)
+        layers[nm] = _plan_stacked(nm, w, sparsity=sparsity, impl=impl,
+                                   m_hint=m_hint, cd=cd)
+    if include_mlp and include_experts and cfg.family == "moe":
+        for nm in MOE_EXPERT_NAMES:
+            w = blocks.get(nm)
+            if w is None or w.ndim != 4:
+                continue
+            layers[nm] = _plan_stacked(nm, w, sparsity=sparsity, impl=impl,
+                                       m_hint=m_hint, cd=cd)
     return ModelPlan(layers=layers,
                      meta=(("model", cfg.name), ("sparsity", float(sparsity)),
                            ("n_layers", int(cfg.n_layers))))
 
 
+def plan_rwkv6(cfg, params: dict, *, sparsity: float | None = None,
+               impl: str | None = None, m_hint: int | None = None
+               ) -> ModelPlan:
+    """Offline plan for the RWKV6 projection family (R/K/V/G/O time-mix
+    plus channel-mix matrices).  The WKV recurrence itself is elementwise
+    and stays dense — the exact analogue of the paper leaving non-CONV/FC
+    ops dense (DESIGN.md §4)."""
+    sparsity = _resolve_sparsity(cfg, sparsity)
+    blocks = params["blocks"]
+    cd = jnp.dtype(cfg.compute_dtype)
+    m_hint = m_hint or 256
+    layers = {nm: _plan_stacked(nm, blocks[nm], sparsity=sparsity, impl=impl,
+                                m_hint=m_hint, cd=cd)
+              for nm in RWKV6_PROJ_NAMES if nm in blocks}
+    return ModelPlan(layers=layers,
+                     meta=(("model", cfg.name), ("sparsity", float(sparsity)),
+                           ("n_layers", int(cfg.n_layers))))
+
+
+def plan_zamba2(cfg, params: dict, *, sparsity: float | None = None,
+                impl: str | None = None, m_hint: int | None = None
+                ) -> ModelPlan:
+    """Offline plan for the Zamba2 Mamba-block in/out projections (z/x in,
+    out_proj).  The SSD recurrence, depthwise convs and the small B/C/dt
+    heads stay dense; the shared attention block is a single (non-stacked)
+    weight set and is left to the dense path."""
+    sparsity = _resolve_sparsity(cfg, sparsity)
+    blocks = params["blocks"]
+    cd = jnp.dtype(cfg.compute_dtype)
+    m_hint = m_hint or 256
+    layers = {nm: _plan_stacked(nm, blocks[nm], sparsity=sparsity, impl=impl,
+                                m_hint=m_hint, cd=cd)
+              for nm in ZAMBA2_PROJ_NAMES if nm in blocks}
+    return ModelPlan(layers=layers,
+                     meta=(("model", cfg.name), ("sparsity", float(sparsity)),
+                           ("n_layers", int(cfg.n_layers))))
+
+
+def plan_model(cfg, params: dict, **kwargs) -> ModelPlan:
+    """Family dispatcher: one entry point for every servable architecture.
+
+    Transformer families (dense/moe/audio/vlm) -> `plan_transformer`;
+    ssm -> `plan_rwkv6`; hybrid -> `plan_zamba2`.
+    """
+    from ..models.api import TRANSFORMER_FAMILIES
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return plan_transformer(cfg, params, **kwargs)
+    kwargs.pop("include_mlp", None)
+    kwargs.pop("include_experts", None)
+    if cfg.family == "ssm":
+        return plan_rwkv6(cfg, params, **kwargs)
+    if cfg.family == "hybrid":
+        return plan_zamba2(cfg, params, **kwargs)
+    raise ValueError(f"no planner for family {cfg.family!r}")
+
+
 def masked_dense_params(params: dict, plan: ModelPlan) -> dict:
     """The masked-dense reference: the same pruned weights as the plan,
-    densified back into the params layout ([L, n_in, n_out]).  Sparse-plan
-    serving must match this numerically."""
+    densified back into the params layout ([*lead, n_in, n_out]).
+    Sparse-plan serving must match this numerically."""
     blocks = dict(params["blocks"])
     for nm, lp in plan.layers.items():
-        dense = lp.dense_weights()                        # [L, O, N]
-        blocks[nm] = jnp.transpose(dense, (0, 2, 1)).astype(
+        dense = lp.dense_weights()                        # [*lead, O, N]
+        blocks[nm] = jnp.swapaxes(dense, -1, -2).astype(
             params["blocks"][nm].dtype)
     out = dict(params)
     out["blocks"] = blocks
     return out
 
 
+# ---------------------------------------------------------------------------
+# Shard-aware plans (encoded leaves get real PartitionSpecs, not replication)
+# ---------------------------------------------------------------------------
+
+def _layer_weight_specs(lp: LayerPlan, mesh):
+    """A weights-shaped pytree of PartitionSpecs for one LayerPlan.
+
+    Encoded leaves shard like the dense weights they replace: the stacked
+    L axis replicated (scan slices it), the expert axis over ``model``
+    (expert parallelism is TP over E), and the output-channel axis over the
+    FSDP axes (``data``/``pod``) — all divisibility-guarded by
+    `distributed.sharding.logical_spec`.
+    """
+    from ..distributed import sharding as shd
+    w = lp.weights
+    fsdp = [shd.fsdp_axes(mesh)]
+
+    def lead_plan(n_lead: int):
+        # first stacked axis is L (replicated); second, when present, is the
+        # expert axis (model-parallel)
+        plans = [None, ["model"] if lp.spec.experts else None]
+        return plans[:n_lead]
+
+    if isinstance(w, TiledBalanced):
+        lead = w.values.ndim - 3
+        vplan = lead_plan(lead) + [fsdp, None, None]
+        return TiledBalanced(
+            shd.logical_spec(mesh, w.values.shape, vplan),
+            shd.logical_spec(mesh, w.indices.shape, vplan),
+            shd.logical_spec(mesh, w.counts.shape,
+                             lead_plan(lead) + [fsdp, None]),
+            n_in=w.n_in, bn=w.bn)
+    if isinstance(w, BalancedSparse):
+        lead = w.values.ndim - 2
+        vplan = lead_plan(lead) + [fsdp, None]
+        return BalancedSparse(
+            shd.logical_spec(mesh, w.values.shape, vplan),
+            shd.logical_spec(mesh, w.indices.shape, vplan), w.n_in)
+    if lp.spec.kind == "conv":         # dense conv [Co, Ci, Hk, Wk]
+        return shd.logical_spec(mesh, w.shape,
+                                [fsdp] + [None] * (w.ndim - 1))
+    lead = w.ndim - 2                  # dense fc [*lead, O, N]
+    return shd.logical_spec(mesh, w.shape, lead_plan(lead) + [fsdp, None])
+
+
+def plan_specs(plan: ModelPlan, mesh) -> ModelPlan:
+    """PartitionSpec pytree exactly matching ``plan``'s structure.
+
+    Returns a `ModelPlan` whose array leaves are replaced by PartitionSpecs
+    (same aux data everywhere, so `jax.tree` maps it against the plan), fit
+    for `distributed.sharding.tree_shardings` + `jax.device_put` /
+    `with_sharding_constraint`.  This replaces the PR-2 behavior of
+    replicating every encoded value onto every device.
+    """
+    return ModelPlan(
+        layers={nm: LayerPlan(spec=lp.spec,
+                              weights=_layer_weight_specs(lp, mesh))
+                for nm, lp in plan.layers.items()},
+        meta=plan.meta)
+
+
+def shard_plan(plan: ModelPlan, mesh) -> ModelPlan:
+    """device_put the plan onto its `plan_specs` shardings (FSDP-style
+    distribution of the encoded values/indices/counts over the mesh)."""
+    from ..distributed import sharding as shd
+    return jax.device_put(plan, shd.tree_shardings(mesh,
+                                                   plan_specs(plan, mesh)))
+
+
 __all__ = ["LayerPlan", "ModelPlan", "PlanSpec", "balanced_mask_k",
            "mask_block_k", "build_layer_plan", "plan_from_balanced",
-           "plan_smallcnn", "plan_transformer", "masked_dense_params",
-           "default_impl", "ATTN_PROJ_NAMES", "MLP_PROJ_NAMES"]
+           "plan_smallcnn", "plan_transformer", "plan_rwkv6", "plan_zamba2",
+           "plan_model", "masked_dense_params", "plan_specs", "shard_plan",
+           "default_impl", "ATTN_PROJ_NAMES", "MLP_PROJ_NAMES",
+           "MOE_SHARED_NAMES", "MOE_EXPERT_NAMES", "RWKV6_PROJ_NAMES",
+           "ZAMBA2_PROJ_NAMES"]

@@ -364,6 +364,29 @@ def tiled_spmm(x: Array, tb: TiledBalanced, *, block_m: int | None = None,
     return y.reshape(*lead, tb.values.shape[0])
 
 
+def tiled_spmm_batched(x: Array, tb: TiledBalanced, *,
+                       block_m: int | None = None,
+                       block_o: int | None = None) -> Array:
+    """Batched pre-encoded entry: one balanced-sparse matmul per group.
+
+    ``x``: [G, ..., N]; ``tb`` leaves carry a matching leading group axis
+    (values [G, O, NB, KB]).  This is the MoE expert path: G is the expert
+    axis of a plan's per-expert encodings (shared BlockChoice, so the
+    static bm/bo/KB are identical across the scan), and the `lax.scan`
+    keeps exactly one expert's encoded weights live in the kernel at a
+    time — the router-dispatched tokens decode inside the kernel path
+    instead of densifying all E experts up front.  Differentiable: each
+    step is the custom-vjp'd `tiled_spmm`.
+    """
+    def body(_, xs):
+        xe, ve, ie, ce = xs
+        y = tiled_spmm(xe, TiledBalanced(ve, ie, ce, n_in=tb.n_in, bn=tb.bn),
+                       block_m=block_m, block_o=block_o)
+        return None, y
+    _, y = jax.lax.scan(body, None, (x, tb.values, tb.indices, tb.counts))
+    return y
+
+
 # ---------------------------------------------------------------------------
 # bitmap_spmm: y = x @ W.T, W bitmap-compressed
 # ---------------------------------------------------------------------------
@@ -398,5 +421,5 @@ def encode_bitmap(w: Array, *, bn: int = 128, k: int | None = None):
     return bitmap_encode(w, bn, k=k)
 
 
-__all__ = ["balanced_spmm", "tiled_spmm", "bitmap_spmm", "encode_bitmap",
-           "choose_blocks", "BlockChoice"]
+__all__ = ["balanced_spmm", "tiled_spmm", "tiled_spmm_batched",
+           "bitmap_spmm", "encode_bitmap", "choose_blocks", "BlockChoice"]

@@ -3,16 +3,18 @@
 ``python -m repro.launch.serve --arch olmo-1b --smoke --sparsity 0.5``
 
 Demonstrates the paper's deployment story on an LM through the layer-plan
-engine: one offline pass (`engine.plan.plan_transformer`) balanced-prunes
-every projection (equal NZE per output channel — the load-balance
+engine: one offline pass (`engine.plan.plan_model` — every family: dense /
+MoE / audio / vlm transformers, RWKV6, Zamba2) balanced-prunes every
+covered projection (equal NZE per output channel — the load-balance
 invariant), picks the per-layer dataflow mode (§V-C) and kernel impl
 (§VI-F), and pre-encodes the weights to the kernel-native format; prefill
 and decode then *execute the plan* — the balanced-sparse kernels run on the
 real token path, asserted via the engine's dispatch stats (no more timing
-dense matmuls on zeroed weights).  Reports tokens/s dense vs sparse, the
-per-layer RIF/RWF/ON_CHIP mode mix and kernel-impl mix, a sparse-vs-
-masked-dense logits parity check, and the compressed weight footprint
-(bitmap format, Fig.8).
+dense matmuls on zeroed weights).  MoE expert tensors additionally assert
+the per-expert path (`expert_balanced_spmm`) dispatched.  Reports tokens/s
+dense vs sparse, the per-family RIF/RWF/ON_CHIP mode mix and kernel-impl
+mix, a sparse-vs-masked-dense logits parity check, and the compressed
+weight footprint (bitmap format, Fig.8).
 """
 from __future__ import annotations
 
@@ -82,7 +84,6 @@ def main(argv=None):
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(cfg, sparse_serving=True)
     from ..models import build_model
-    from ..models.api import TRANSFORMER_FAMILIES
     bundle = build_model(cfg)
     params = bundle.init(jax.random.key(0))
     prompt = jax.random.randint(jax.random.key(1),
@@ -90,21 +91,20 @@ def main(argv=None):
                                 cfg.vocab_size)
     max_len = args.prompt_len + args.gen_steps + 1
 
-    if cfg.family not in TRANSFORMER_FAMILIES:
-        print(f"[serve] {cfg.family} arch: projection planning not wired "
-              "for this family yet — running dense only")
-        toks = greedy_generate(bundle, params, prompt, args.gen_steps,
-                               max_len)
-        return {"dense": {"sample": toks[0, :8].tolist()}}
-
     # ---- the offline pass: build the plan once, serve from it ------------
-    plan = engine_plan.plan_transformer(
-        cfg, params, sparsity=args.sparsity,
-        impl=None if args.impl == "auto" else args.impl,
-        include_mlp=not args.attn_only,
-        m_hint=args.batch * args.prompt_len)
-    print(f"[serve] layer plan ({len(plan.layers)} projection groups x "
-          f"{cfg.n_layers} layers):")
+    plan_kwargs = dict(sparsity=args.sparsity,
+                       impl=None if args.impl == "auto" else args.impl,
+                       m_hint=args.batch * args.prompt_len)
+    from ..models.api import TRANSFORMER_FAMILIES
+    if cfg.family in TRANSFORMER_FAMILIES:
+        plan_kwargs["include_mlp"] = not args.attn_only
+    elif args.attn_only:
+        print(f"[serve] --attn-only is inapplicable to family {cfg.family} "
+              "(no separate attention projections are planned); planning "
+              "the full projection family")
+    plan = engine_plan.plan_model(cfg, params, **plan_kwargs)
+    print(f"[serve] family={cfg.family} layer plan ({len(plan.layers)} "
+          f"projection groups x {cfg.n_layers} layers):")
     print(plan.summary())
     assert plan.sparse_layer_count > 0, \
         "plan produced no sparse-kernel layers — sparsity below §VI-F " \
@@ -127,6 +127,12 @@ def main(argv=None):
     stats = engine_execute.stats()
     assert stats.get("balanced_spmm", 0) > 0, \
         f"balanced_spmm never dispatched — sparse path is a no-op ({stats})"
+    if any(lp.spec.experts for lp in plan.layers.values()):
+        # planned expert tensors must run the per-expert balanced kernels,
+        # not a dense einsum on densified experts (--attn-only plans carry
+        # no expert layers and are exempt)
+        assert stats.get("expert_balanced_spmm", 0) > 0, \
+            f"MoE expert layers never hit the per-expert path ({stats})"
     print(f"[serve] parity sparse vs masked-dense: max |dlogit| = {diff:.2e}"
           f" (tol {tol:g});  engine dispatches: {stats}")
 
@@ -150,20 +156,24 @@ def main(argv=None):
     total_numel = total_nnz = 0
     for lp in plan.layers.values():
         s = lp.spec
-        layers = cfg.n_layers
-        total_numel += s.n_in * s.n_out * layers
-        total_nnz += s.k * s.n_out * layers
+        # each projection group repeats per layer, and per expert for MoE
+        # expert tensors
+        mult = cfg.n_layers * max(s.experts, 1)
+        total_numel += s.n_in * s.n_out * mult
+        total_nnz += s.k * s.n_out * mult
     dense_bits = total_numel * 16
     comp_bits = compressed_bits(total_numel, total_nnz, elem_bits=16)
     results["plan"] = {
+        "family": cfg.family,
         "mode_mix": plan.mode_mix(), "impl_mix": plan.impl_mix(),
         "sparse_layers": plan.sparse_layer_count,
         "parity_max_abs_diff": diff, "engine_stats": stats,
     }
-    print(f"[serve] planned weight sparsity "
+    print(f"[serve] family={cfg.family} planned weight sparsity "
           f"{1 - total_nnz / max(total_numel, 1):.2f}, "
           f"bitmap compression {dense_bits / comp_bits:.2f}x;  "
-          f"dataflow mode mix {plan.mode_mix()}")
+          f"dataflow mode mix {plan.mode_mix()}  "
+          f"impl mix {plan.impl_mix()}")
     return results
 
 

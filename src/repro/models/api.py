@@ -64,9 +64,30 @@ def register_family(name: str):
     return deco
 
 
-# families served by models/transformer.py — the archs whose stacked 2-D
-# projections the layer-plan engine can prune (engine.plan.plan_transformer)
+# families served by models/transformer.py (engine.plan.plan_transformer
+# covers their projections incl. MoE expert tensors; ssm/hybrid have their
+# own planners — engine.plan.plan_model dispatches)
 TRANSFORMER_FAMILIES = ("dense", "audio", "vlm", "moe")
+
+
+def planned_proj(lp, plan_layers, name: str, x: Array, cd) -> Array:
+    """One projection x @ lp[name], routed through the plan's balanced-
+    sparse kernel when the layer is planned (plan weights are output-major
+    [O, N] = W.T, so `apply_fc` computes the same x @ W).  The shared
+    dispatch helper for every model family's sparse-serving path."""
+    if plan_layers is not None and name in plan_layers:
+        from ..engine.execute import apply_fc
+        return apply_fc(x, plan_layers[name]).astype(cd)
+    return x @ lp[name].astype(cd)
+
+
+def serving_plan(cfg: ModelConfig, params):
+    """The offline projection plan, when sparse serving is on and the
+    caller attached one (``params["sparse_plan"]``, from
+    `launch/serve.py`).  Training paths never ask for it."""
+    if cfg.sparse_serving and isinstance(params, dict):
+        return params.get("sparse_plan")
+    return None
 
 
 def build_model(cfg: ModelConfig, mesh=None) -> ModelBundle:

@@ -9,7 +9,11 @@ O(1) memory that makes the ``long_500k`` cell runnable for this family.
 
 Sense applicability (DESIGN.md §4): balanced pruning targets the R/K/V/G/O
 and channel-mix matrices; the recurrence itself is elementwise (dense), the
-exact analogue of the paper leaving non-CONV/FC ops dense.
+exact analogue of the paper leaving non-CONV/FC ops dense.  When
+``cfg.sparse_serving`` and a plan is attached (``params["sparse_plan"]``
+from `engine.plan.plan_rwkv6`), prefill and decode run exactly those
+projections through the balanced-sparse kernel path
+(`engine.execute.apply_fc`); training stays dense.
 """
 from __future__ import annotations
 
@@ -22,7 +26,8 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
 from ..distributed import sharding as shd
-from .api import ModelBundle, register_family
+from .api import (ModelBundle, planned_proj as _proj, register_family,
+                  serving_plan)
 from .layers import causal_lm_labels, chunked_cross_entropy, layer_norm
 
 Array = jax.Array
@@ -210,7 +215,8 @@ def _wkv_chunked(r, k, v, w, u, state, *, chunk: int = 32):
     return jnp.moveaxis(y, 0, 1), state
 
 
-def _time_mix(cfg, lp, x: Array, shift_last: Array, state: Array, mesh):
+def _time_mix(cfg, lp, x: Array, shift_last: Array, state: Array, mesh,
+              plan_layers=None):
     """x: [B, T, D]. Returns (out, new_shift_last, new_state)."""
     cd = _cdtype(cfg)
     b, t, d = x.shape
@@ -221,10 +227,10 @@ def _time_mix(cfg, lp, x: Array, shift_last: Array, state: Array, mesh):
     def lerp(mu):
         return x + (xs - x) * mu.astype(cd)
 
-    r = lerp(lp["mu_r"]) @ lp["wr"].astype(cd)
-    k = lerp(lp["mu_k"]) @ lp["wkm"].astype(cd)
-    v = lerp(lp["mu_v"]) @ lp["wv"].astype(cd)
-    g = jax.nn.silu(lerp(lp["mu_g"]) @ lp["wg"].astype(cd))
+    r = _proj(lp, plan_layers, "wr", lerp(lp["mu_r"]), cd)
+    k = _proj(lp, plan_layers, "wkm", lerp(lp["mu_k"]), cd)
+    v = _proj(lp, plan_layers, "wv", lerp(lp["mu_v"]), cd)
+    g = jax.nn.silu(_proj(lp, plan_layers, "wg", lerp(lp["mu_g"]), cd))
     # data-dependent decay (the Finch contribution)
     xw = lerp(lp["mu_w"])
     w_log = lp["w0"].astype(cd) + jnp.tanh(xw @ lp["wA"].astype(cd)) \
@@ -243,26 +249,29 @@ def _time_mix(cfg, lp, x: Array, shift_last: Array, state: Array, mesh):
     var = out.reshape(b, t, nh, hd).var(-1, keepdims=True)
     out = ((out.reshape(b, t, nh, hd) - mu) * jax.lax.rsqrt(var + 1e-5)
            ).reshape(b, t, d) * lp["gn"].astype(jnp.float32)
-    out = (out.astype(cd) * g) @ lp["wo"].astype(cd)
+    out = _proj(lp, plan_layers, "wo", out.astype(cd) * g, cd)
     return out, x[:, -1, :], state
 
 
-def _channel_mix(cfg, lp, x: Array, shift_last: Array):
+def _channel_mix(cfg, lp, x: Array, shift_last: Array, plan_layers=None):
     cd = _cdtype(cfg)
     xs = _shift(x, shift_last)
     xk = x + (xs - x) * lp["cmu_k"].astype(cd)
     xr = x + (xs - x) * lp["cmu_r"].astype(cd)
-    k = jnp.square(jax.nn.relu(xk @ lp["ck"].astype(cd)))
-    out = jax.nn.sigmoid(xr @ lp["cr"].astype(cd)) * (k @ lp["cv"].astype(cd))
+    k = jnp.square(jax.nn.relu(_proj(lp, plan_layers, "ck", xk, cd)))
+    out = jax.nn.sigmoid(_proj(lp, plan_layers, "cr", xr, cd)) \
+        * _proj(lp, plan_layers, "cv", k, cd)
     return out, x[:, -1, :]
 
 
-def _block(cfg, mesh, lp, h, att_shift, ffn_shift, state):
+def _block(cfg, mesh, lp, h, att_shift, ffn_shift, state, plan_layers=None):
     x = layer_norm(h, lp["ln1"], lp["ln1_b"]).astype(_cdtype(cfg))
-    att, att_shift, state = _time_mix(cfg, lp, x, att_shift, state, mesh)
+    att, att_shift, state = _time_mix(cfg, lp, x, att_shift, state, mesh,
+                                      plan_layers=plan_layers)
     h = h + att.astype(h.dtype)
     x = layer_norm(h, lp["ln2"], lp["ln2_b"]).astype(_cdtype(cfg))
-    ffn, ffn_shift = _channel_mix(cfg, lp, x, ffn_shift)
+    ffn, ffn_shift = _channel_mix(cfg, lp, x, ffn_shift,
+                                  plan_layers=plan_layers)
     h = h + ffn.astype(h.dtype)
     if mesh is not None and h.shape[1] > 1:
         h = shd.with_channel_sharding(mesh, h)
@@ -288,7 +297,10 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
                 jnp.zeros((cfg.n_layers, b, d), jnp.float32),      # ffn shift
                 jnp.zeros((cfg.n_layers, b, nh, hd, hd), jnp.float32))
 
-    def _forward(params, batch, states):
+    def _serving_plan(params):
+        return serving_plan(cfg, params)
+
+    def _forward(params, batch, states, plan=None):
         tokens = batch["tokens"]
         b = tokens.shape[0]
         h = jnp.take(params["embed"], tokens, axis=0).astype(_cdtype(cfg))
@@ -297,13 +309,19 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
         att_s, ffn_s, wkv_s = states
 
         def body(h, xs):
-            lp, a_s, f_s, w_s = xs
-            h, a_s, f_s, w_s = _block(cfg, mesh, lp, h, a_s, f_s, w_s)
+            if plan is not None:
+                lp, a_s, f_s, w_s, plp = xs
+            else:
+                (lp, a_s, f_s, w_s), plp = xs, None
+            h, a_s, f_s, w_s = _block(cfg, mesh, lp, h, a_s, f_s, w_s,
+                                      plan_layers=plp)
             return h, (a_s, f_s, w_s)
         body_fn = (jax.checkpoint(body, policy=remat_policy)
                    if cfg.remat else body)
-        h, (att_s, ffn_s, wkv_s) = jax.lax.scan(
-            body_fn, h, (params["blocks"], att_s, ffn_s, wkv_s))
+        xs = (params["blocks"], att_s, ffn_s, wkv_s)
+        if plan is not None:
+            xs = xs + (plan.layers,)
+        h, (att_s, ffn_s, wkv_s) = jax.lax.scan(body_fn, h, xs)
         h = layer_norm(h, params["final_norm"], None)
         return h, (att_s, ffn_s, wkv_s)
 
@@ -317,7 +335,8 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
 
     def prefill(params, batch):
         tokens = batch["tokens"]
-        h, states = _forward(params, batch, _zero_states(tokens.shape[0]))
+        h, states = _forward(params, batch, _zero_states(tokens.shape[0]),
+                             plan=_serving_plan(params))
         logits = (h[:, -1].astype(jnp.float32)
                   @ params["embed"].astype(jnp.float32).T)
         return logits, {"att_shift": states[0], "ffn_shift": states[1],
@@ -329,7 +348,8 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
 
     def decode_step(params, batch, cache):
         states = (cache["att_shift"], cache["ffn_shift"], cache["wkv"])
-        h, states = _forward(params, batch, states)
+        h, states = _forward(params, batch, states,
+                             plan=_serving_plan(params))
         logits = (h[:, -1].astype(jnp.float32)
                   @ params["embed"].astype(jnp.float32).T)
         return logits, {"att_shift": states[0], "ffn_shift": states[1],

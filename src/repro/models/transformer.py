@@ -13,10 +13,12 @@ an offline-built projection plan (``params["sparse_plan"]``, an
 `engine.plan.ModelPlan` from `engine.plan.plan_transformer`), the prefill
 *and* decode paths run every planned projection through the balanced-sparse
 kernel path (`engine.execute.apply_fc` — weights pre-encoded at plan time,
-impl/blocks fixed per layer).  The plan's stacked [L, ...] leaves are
-scanned alongside ``params["blocks"]``, so compile cost stays
-depth-independent.  Training stays dense (the paper prunes *for
-inference*; the prune->retrain loop lives in core.pruning).
+impl/blocks fixed per layer).  MoE expert tensors go through the per-expert
+path (`engine.execute.apply_expert_fc`: the capacity-dispatch buffer
+[E, C, d] hits one pre-encoded balanced-sparse matmul per expert).  The
+plan's stacked [L, ...] leaves are scanned alongside ``params["blocks"]``,
+so compile cost stays depth-independent.  Training stays dense (the paper
+prunes *for inference*; the prune->retrain loop lives in core.pruning).
 """
 from __future__ import annotations
 
@@ -30,7 +32,8 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
 from ..distributed import sharding as shd
-from .api import ModelBundle, register_family
+from .api import (ModelBundle, planned_proj as _proj, register_family,
+                  serving_plan)
 from .layers import (apply_rope, blocked_causal_attention, causal_lm_labels,
                      chunked_cross_entropy, decode_attention, layer_norm,
                      rms_norm)
@@ -224,16 +227,6 @@ def gather_for_use(cfg: ModelConfig, mesh, lp: Dict[str, Array],
 # Block forward
 # ---------------------------------------------------------------------------
 
-def _proj(lp, plan_layers, name: str, x: Array, cd) -> Array:
-    """One projection: plan-driven balanced-sparse kernel when the layer is
-    planned, dense matmul otherwise.  Plan weights are stored output-major
-    ([O, N] = W.T), so apply_fc computes the same x @ W."""
-    if plan_layers is not None and name in plan_layers:
-        from ..engine.execute import apply_fc
-        return apply_fc(x, plan_layers[name]).astype(cd)
-    return x @ lp[name].astype(cd)
-
-
 def _attn(cfg: ModelConfig, lp, h: Array, positions: Array, mesh,
           kv_override=None, cache_len=None, plan_layers=None) -> tuple:
     """Attention sublayer.  Returns (out, (k, v)) — k/v for cache building.
@@ -302,7 +295,20 @@ def _mlp(cfg: ModelConfig, lp, h: Array, plan_layers=None) -> Array:
     return _proj(lp, plan_layers, "w_out", g, cd)
 
 
-def _moe(cfg: ModelConfig, lp, h: Array, mesh) -> tuple:
+def _expert_proj(lp, plan_layers, name: str, x: Array, cd) -> Array:
+    """One per-expert projection on the dispatch buffer x: [E, C, n_in].
+
+    Planned expert layers run the per-expert balanced-sparse kernels
+    (`engine.execute.apply_expert_fc`, weights pre-encoded per expert at
+    plan time); otherwise the dense batched einsum.  The contraction is
+    the same for gate/up ([E, d, f]) and down ([E, f, d]) tensors."""
+    if plan_layers is not None and name in plan_layers:
+        from ..engine.execute import apply_expert_fc
+        return apply_expert_fc(x, plan_layers[name]).astype(cd)
+    return jnp.einsum("ecn,enf->ecf", x, lp[name].astype(cd))
+
+
+def _moe(cfg: ModelConfig, lp, h: Array, mesh, plan_layers=None) -> tuple:
     """Capacity-dispatch MoE FFN (GShard-style, EP over ``model``).
 
     Returns (out, aux_loss).  Long sequences are processed in segments of
@@ -320,20 +326,23 @@ def _moe(cfg: ModelConfig, lp, h: Array, mesh) -> tuple:
         seg_s //= 2
     if s > seg_s:
         def one(_, xseg):                       # xseg: [b, seg_s, d]
-            y, aux = _moe_tokens(cfg, lp, xseg.reshape(b * seg_s, d), mesh)
+            y, aux = _moe_tokens(cfg, lp, xseg.reshape(b * seg_s, d), mesh,
+                                 plan_layers=plan_layers)
             return None, (y.reshape(b, seg_s, d), aux)
         xs = jnp.moveaxis(x.reshape(b, s // seg_s, seg_s, d), 1, 0)
         _, (y, auxes) = jax.lax.scan(one, None, xs)
         y = jnp.moveaxis(y, 0, 1).reshape(b, s, d)
         return y, jnp.mean(auxes)
-    y, aux = _moe_tokens(cfg, lp, x.reshape(b * s, d), mesh)
+    y, aux = _moe_tokens(cfg, lp, x.reshape(b * s, d), mesh,
+                         plan_layers=plan_layers)
     return y.reshape(b, s, d), aux
 
 
 _MOE_SEG = 65536
 
 
-def _moe_tokens(cfg: ModelConfig, lp, xf: Array, mesh) -> tuple:
+def _moe_tokens(cfg: ModelConfig, lp, xf: Array, mesh,
+                plan_layers=None) -> tuple:
     cd = _cdtype(cfg)
     t, d = xf.shape
     e, k = cfg.n_experts, cfg.top_k
@@ -361,16 +370,17 @@ def _moe_tokens(cfg: ModelConfig, lp, xf: Array, mesh) -> tuple:
         buf = jax.lax.with_sharding_constraint(
             buf, shd.named(mesh, shd.logical_spec(
                 mesh, (e, cap, d), [["model"], [("data", "pod")], None])))
-    hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, lp["we_gate"].astype(cd))
-                         ) * jnp.einsum("ecd,edf->ecf", buf, lp["we_up"].astype(cd))
-    eout = jnp.einsum("ecf,efd->ecd", hidden, lp["we_down"].astype(cd))
+    hidden = jax.nn.silu(_expert_proj(lp, plan_layers, "we_gate", buf, cd)) \
+        * _expert_proj(lp, plan_layers, "we_up", buf, cd)
+    eout = _expert_proj(lp, plan_layers, "we_down", hidden, cd)
     eout = eout.reshape(e * cap, d)
     # combine: gather each (t, k) slot, weight by gate
     y = eout[slot].reshape(t, k, d)
     y = (y * (gate.astype(cd) * valid)[..., None]).sum(axis=1)
     if cfg.n_shared_experts:
-        g = jax.nn.silu(xf @ lp["ws_gate"].astype(cd)) * (xf @ lp["ws_up"].astype(cd))
-        y = y + g @ lp["ws_down"].astype(cd)
+        g = jax.nn.silu(_proj(lp, plan_layers, "ws_gate", xf, cd)) \
+            * _proj(lp, plan_layers, "ws_up", xf, cd)
+        y = y + _proj(lp, plan_layers, "ws_down", g, cd)
     return y, aux
 
 
@@ -381,7 +391,7 @@ def _block(cfg: ModelConfig, mesh, h: Array, lp, positions: Array,
                          plan_layers=plan_layers)
     h = h + attn_out.astype(h.dtype)
     if cfg.family == "moe":
-        mlp_out, aux = _moe(cfg, lp, h, mesh)
+        mlp_out, aux = _moe(cfg, lp, h, mesh, plan_layers=plan_layers)
     else:
         mlp_out, aux = _mlp(cfg, lp, h, plan_layers=plan_layers), \
             jnp.float32(0.0)
@@ -424,11 +434,7 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
         return gather_for_use(cfg, mesh, lp, uspecs)
 
     def _serving_plan(params):
-        """The offline projection plan, when sparse serving is on and the
-        caller attached one (`launch/serve.py`).  Training ignores it."""
-        if cfg.sparse_serving and isinstance(params, dict):
-            return params.get("sparse_plan")
-        return None
+        return serving_plan(cfg, params)
 
     def init(rng):
         return init_params(cfg, rng)

@@ -11,6 +11,13 @@ Mamba2 (SSD) per layer:
     out = out_proj(rmsnorm(y) * silu(z))
 
 The time recurrence is chunk-checkpointed like rwkv6's WKV scan.
+
+Sense applicability (DESIGN.md §4): balanced pruning targets the
+Mamba-block in/out projections (z_proj, x_proj, out_proj); with
+``cfg.sparse_serving`` and an attached plan (``params["sparse_plan"]``
+from `engine.plan.plan_zamba2`) prefill and decode run those through the
+balanced-sparse kernel path.  The SSD recurrence, depthwise convs, tiny
+B/C/dt heads and the shared attention block stay dense.
 """
 from __future__ import annotations
 
@@ -23,7 +30,8 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
 from ..distributed import sharding as shd
-from .api import ModelBundle, register_family
+from .api import (ModelBundle, planned_proj as _proj, register_family,
+                  serving_plan)
 from .layers import (apply_rope, blocked_causal_attention, causal_lm_labels,
                      chunked_cross_entropy, decode_attention, rms_norm)
 
@@ -267,14 +275,14 @@ def _ssd_chunked(x, dt, a, B, C, state, *, chunk: int = 64):
     return jnp.moveaxis(y, 0, 1), state
 
 
-def _mamba_block(cfg, lp, h, ssm_state, conv_state):
+def _mamba_block(cfg, lp, h, ssm_state, conv_state, plan_layers=None):
     cd = _cdtype(cfg)
     b, t, d = h.shape
     d_in, nheads, conv_dim, _ = _dims(cfg)
     hd, n = cfg.ssm_head_dim, cfg.ssm_state
     x = rms_norm(h, lp["norm"]).astype(cd)
-    z = x @ lp["z_proj"].astype(cd)
-    xm = x @ lp["x_proj"].astype(cd)
+    z = _proj(lp, plan_layers, "z_proj", x, cd)
+    xm = _proj(lp, plan_layers, "x_proj", x, cd)
     Bm_r = x @ lp["B_proj"].astype(cd)
     Cm_r = x @ lp["C_proj"].astype(cd)
     dt_raw = x @ lp["dt_proj"].astype(cd)
@@ -306,7 +314,7 @@ def _mamba_block(cfg, lp, h, ssm_state, conv_state):
         * xs.reshape(b, t, nheads, hd).astype(jnp.float32)
     y = y.reshape(b, t, d_in)
     y = rms_norm(y, lp["gate_norm"]) * jax.nn.silu(z.astype(jnp.float32))
-    out = y.astype(cd) @ lp["out_proj"].astype(cd)
+    out = _proj(lp, plan_layers, "out_proj", y.astype(cd), cd)
     return h + out.astype(h.dtype), ssm_state, conv_state
 
 
@@ -379,7 +387,15 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
     def _slice_blocks(params, a, b):
         return jax.tree.map(lambda x: x[a:b], params["blocks"])
 
-    def _forward(params, batch, ssm_states, attn_hook):
+    def _slice_plan(plan, a, b):
+        # LayerPlan is a pytree: array leaves carry the stacked-L axis, the
+        # static spec rides along as aux data
+        return jax.tree.map(lambda x: x[a:b], plan.layers)
+
+    def _serving_plan(params):
+        return serving_plan(cfg, params)
+
+    def _forward(params, batch, ssm_states, attn_hook, plan=None):
         """Static group structure: [shared-attn, mamba x attn_every] x n_attn.
 
         ``attn_hook(h, g) -> h`` runs the shared block for group g.  Groups
@@ -397,8 +413,11 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
         ssm_out, conv_out = [], []
 
         def body(h, xs):
-            lp, s_s, c_s = xs
-            h, s_s, c_s = _mamba_block(cfg, lp, h, s_s, c_s)
+            if plan is not None:
+                lp, s_s, c_s, plp = xs
+            else:
+                (lp, s_s, c_s), plp = xs, None
+            h, s_s, c_s = _mamba_block(cfg, lp, h, s_s, c_s, plan_layers=plp)
             if mesh is not None and s > 1:
                 h = shd.with_channel_sharding(mesh, h)
             return h, (s_s, c_s)
@@ -407,9 +426,10 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
                    if cfg.remat else body)
         for g, (a, bnd) in enumerate(group_bounds):
             h = attn_hook(h, g)
-            h, (s_o, c_o) = jax.lax.scan(
-                body_fn, h, (_slice_blocks(params, a, bnd),
-                             ssm_s[a:bnd], conv_s[a:bnd]))
+            xs = (_slice_blocks(params, a, bnd), ssm_s[a:bnd], conv_s[a:bnd])
+            if plan is not None:
+                xs = xs + (_slice_plan(plan, a, bnd),)
+            h, (s_o, c_o) = jax.lax.scan(body_fn, h, xs)
             ssm_out.append(s_o)
             conv_out.append(c_o)
         h = rms_norm(h, params["final_norm"])
@@ -441,7 +461,8 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
             kv_parts.append((k, v))
             return h2
 
-        h, (ssm_s, conv_s) = _forward(params, batch, _zero_ssm(b), attn_hook)
+        h, (ssm_s, conv_s) = _forward(params, batch, _zero_ssm(b), attn_hook,
+                                      plan=_serving_plan(params))
         ks = jnp.stack([k for k, _ in kv_parts])
         vs = jnp.stack([v for _, v in kv_parts])
         logits = (h[:, -1].astype(jnp.float32)
@@ -461,11 +482,15 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
         positions = clen[:, None]
         h = jnp.take(params["embed"], tokens, axis=0).astype(_cdtype(cfg))
         ssm_s, conv_s = cache["ssm"], cache["conv"]
+        plan = _serving_plan(params)
         ssm_out, conv_out, kv_out = [], [], []
 
         def body(h, xs):
-            lp, s_s, c_s = xs
-            h, s_s, c_s = _mamba_block(cfg, lp, h, s_s, c_s)
+            if plan is not None:
+                lp, s_s, c_s, plp = xs
+            else:
+                (lp, s_s, c_s), plp = xs, None
+            h, s_s, c_s = _mamba_block(cfg, lp, h, s_s, c_s, plan_layers=plp)
             return h, (s_s, c_s)
 
         for g, (a, bnd) in enumerate(group_bounds):
@@ -473,9 +498,10 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
                 cfg, params["shared"], h, positions, mesh,
                 kv_override=(cache["k"][g], cache["v"][g], clen))
             kv_out.append((kc, vc))
-            h, (s_o, c_o) = jax.lax.scan(
-                body, h, (_slice_blocks(params, a, bnd),
-                          ssm_s[a:bnd], conv_s[a:bnd]))
+            xs = (_slice_blocks(params, a, bnd), ssm_s[a:bnd], conv_s[a:bnd])
+            if plan is not None:
+                xs = xs + (_slice_plan(plan, a, bnd),)
+            h, (s_o, c_o) = jax.lax.scan(body, h, xs)
             ssm_out.append(s_o)
             conv_out.append(c_o)
         h = rms_norm(h, params["final_norm"])

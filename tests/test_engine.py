@@ -1,7 +1,14 @@
 """Layer-plan engine: pytree/checkpoint round-trips, plan-vs-masked-dense
-parity on the small CNN and the smoke transformer, the Fig.22b dataflow
-mode-mix regression, and the no-call-time-cache contract."""
+parity on the small CNN and every smoke model family (dense transformer,
+MoE incl. expert tensors, RWKV6, Zamba2), plan determinism, shard-aware
+plan specs, the Fig.22b dataflow mode-mix regression, and the
+no-call-time-cache contract."""
 import dataclasses
+import gc
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -168,6 +175,255 @@ def test_transformer_plan_matches_masked_dense():
                                rtol=2e-2, atol=2e-2)
 
 
+def _family_parity(arch, *, impl=None, expect_expert=False, seq=16):
+    """Shared harness: plan-vs-masked-dense prefill parity for one smoke
+    arch, returning the engine dispatch stats observed on the sparse
+    trace."""
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    cfg = dataclasses.replace(get_smoke(arch), sparse_serving=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    plan = engine_plan.plan_model(cfg, params, sparsity=0.5, impl=impl)
+    assert plan.sparse_layer_count > 0
+    tokens = jax.random.randint(jax.random.key(1), (2, seq), 0,
+                                cfg.vocab_size)
+    sparse_params = {**params, "sparse_plan": plan}
+    ref_params = engine_plan.masked_dense_params(params, plan)
+    engine_execute.reset_stats()
+    logits_s, _ = jax.jit(m.prefill)(sparse_params, {"tokens": tokens})
+    stats = engine_execute.stats()
+    assert stats.get("balanced_spmm", 0) > 0
+    if expect_expert:
+        assert stats.get("expert_balanced_spmm", 0) > 0
+    logits_r, _ = jax.jit(m.prefill)(ref_params, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(logits_s, np.float32),
+                               np.asarray(logits_r, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    return cfg, m, params, plan, stats
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_moe_plan_matches_masked_dense(impl):
+    """MoE expert tensors [L, E, d, f] run the per-expert balanced kernel
+    path (apply_expert_fc) and match the masked-dense einsum reference."""
+    cfg, m, params, plan, stats = _family_parity(
+        "deepseek-moe-16b", impl=impl, expect_expert=True)
+    # every expert tensor is planned, per-expert, with a shared BlockChoice
+    for nm in engine_plan.MOE_EXPERT_NAMES:
+        lp = plan.layers[nm]
+        assert lp.spec.experts == cfg.n_experts
+        assert lp.spec.impl == impl
+        lead = lp.weights.values.shape[:2]
+        assert lead == (cfg.n_layers, cfg.n_experts)
+    # shared experts ride the plain stacked path
+    assert plan.layers["ws_gate"].spec.experts == 0
+
+
+def test_moe_plan_decode_step_parity():
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    cfg = dataclasses.replace(get_smoke("deepseek-moe-16b"),
+                              sparse_serving=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    plan = engine_plan.plan_model(cfg, params, sparsity=0.5)
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                cfg.vocab_size)
+    sparse_params = {**params, "sparse_plan": plan}
+    ref_params = engine_plan.masked_dense_params(params, plan)
+    _, cache_s = jax.jit(m.prefill)(sparse_params, {"tokens": tokens})
+    _, cache_r = jax.jit(m.prefill)(ref_params, {"tokens": tokens})
+    batch = {"tokens": tokens[:, :1],
+             "cache_len": jnp.full((2,), 16, jnp.int32)}
+    for cache in (cache_s, cache_r):
+        c0 = m.init_cache(2, 24)
+        for key in ("k", "v"):
+            cache[key] = c0[key].at[:, :, :16].set(
+                cache[key].astype(c0[key].dtype))
+    ld_s, _ = jax.jit(m.decode_step)(sparse_params, batch, cache_s)
+    ld_r, _ = jax.jit(m.decode_step)(ref_params, batch, cache_r)
+    np.testing.assert_allclose(np.asarray(ld_s, np.float32),
+                               np.asarray(ld_r, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_rwkv6_plan_matches_masked_dense():
+    """The R/K/V/G/O + channel-mix family runs through the plan; the WKV
+    recurrence stays dense."""
+    _, _, _, plan, _ = _family_parity("rwkv6-3b")
+    assert set(plan.layers) == set(engine_plan.RWKV6_PROJ_NAMES)
+
+
+def test_zamba2_plan_matches_masked_dense():
+    """Mamba-block in/out projections run through the plan; SSD recurrence,
+    convs and the shared attention block stay dense."""
+    _, _, _, plan, _ = _family_parity("zamba2-1.2b")
+    assert set(plan.layers) == set(engine_plan.ZAMBA2_PROJ_NAMES)
+
+
+def test_rwkv6_zamba2_decode_step_parity():
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    for arch in ("rwkv6-3b", "zamba2-1.2b"):
+        cfg = dataclasses.replace(get_smoke(arch), sparse_serving=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.key(0))
+        plan = engine_plan.plan_model(cfg, params, sparsity=0.5)
+        tokens = jax.random.randint(jax.random.key(1), (2, 8), 0,
+                                    cfg.vocab_size)
+        sparse_params = {**params, "sparse_plan": plan}
+        ref_params = engine_plan.masked_dense_params(params, plan)
+        _, cache_s = jax.jit(m.prefill)(sparse_params, {"tokens": tokens})
+        _, cache_r = jax.jit(m.prefill)(ref_params, {"tokens": tokens})
+        if arch == "zamba2-1.2b":
+            for cache in (cache_s, cache_r):
+                c0 = m.init_cache(2, 16)
+                for key in ("k", "v"):
+                    cache[key] = c0[key].at[:, :, :8].set(
+                        cache[key].astype(c0[key].dtype))
+        batch = {"tokens": tokens[:, :1],
+                 "cache_len": jnp.full((2,), 8, jnp.int32)}
+        ld_s, _ = jax.jit(m.decode_step)(sparse_params, batch, cache_s)
+        ld_r, _ = jax.jit(m.decode_step)(ref_params, batch, cache_r)
+        np.testing.assert_allclose(np.asarray(ld_s, np.float32),
+                                   np.asarray(ld_r, np.float32),
+                                   rtol=2e-2, atol=2e-2, err_msg=arch)
+
+
+# ---------------------------------------------------------------------------
+# Plan determinism (plans are safe to cache/ship)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["deepseek-moe-16b", "rwkv6-3b"])
+def test_plan_determinism_across_builds_and_checkpoint(arch, tmp_path):
+    """Identical params + config -> byte-identical ModelPlan, with leaves
+    compared after a checkpoint save/restore round-trip."""
+    from repro.checkpoint.store import restore_checkpoint, save_checkpoint
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    cfg = get_smoke(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    p1 = engine_plan.plan_model(cfg, params, sparsity=0.5)
+    p2 = engine_plan.plan_model(cfg, params, sparsity=0.5)
+    save_checkpoint(tmp_path, 1, p1)
+    got, _ = restore_checkpoint(tmp_path, 1, p2)
+    # identical static decisions and tree structure...
+    assert jax.tree_util.tree_structure(got) == \
+        jax.tree_util.tree_structure(p2)
+    for nm in p2.layers:
+        assert got.layers[nm].spec == p2.layers[nm].spec
+    # ...and byte-identical leaves post round-trip
+    for l1, l2 in zip(jax.tree.leaves(got), jax.tree.leaves(p2)):
+        a1, a2 = np.asarray(l1), np.asarray(l2)
+        assert a1.dtype == a2.dtype and a1.shape == a2.shape
+        assert a1.tobytes() == a2.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Shard-aware plans
+# ---------------------------------------------------------------------------
+
+def test_plan_specs_encoded_values_not_replicated():
+    """Encoded plan leaves carry real PartitionSpecs: output channels over
+    the FSDP axes, the expert axis over ``model``, stacked L replicated."""
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    cfg = get_smoke("deepseek-moe-16b")
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    plan = engine_plan.plan_model(cfg, params, sparsity=0.5)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    specs = engine_plan.plan_specs(plan, mesh)
+    assert jax.tree_util.tree_structure(
+        specs, is_leaf=lambda x: isinstance(x, P)).num_leaves == \
+        len(jax.tree.leaves(plan))
+    for nm, lp in specs.layers.items():
+        vspec = lp.weights.values if hasattr(lp.weights, "values") \
+            else lp.weights
+        assert any(d is not None for d in vspec), (nm, vspec)
+        assert vspec[0] is None, "stacked L axis must stay replicated"
+        if plan.layers[nm].spec.experts:
+            assert vspec[1] == "model", "expert axis is expert-parallel"
+            assert vspec[2] == "data", "O axis is FSDP-sharded"
+        else:
+            assert vspec[1] == "data", "O axis is FSDP-sharded"
+
+
+SHARDED_PLAN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.engine import plan as engine_plan
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = get_smoke("deepseek-moe-16b")
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    plan = engine_plan.plan_model(cfg, params, sparsity=0.5)
+    sharded = engine_plan.shard_plan(plan, mesh)
+    vals = sharded.layers["we_gate"].weights.values
+    nshards = len({s.device for s in vals.addressable_shards})
+    assert nshards > 1, f"expert values replicated ({nshards} shard devices)"
+    # densified parity survives resharding
+    import numpy as np
+    d1 = np.asarray(plan.layers["we_gate"].dense_weights(), np.float32)
+    d2 = np.asarray(sharded.layers["we_gate"].dense_weights(), np.float32)
+    np.testing.assert_allclose(d1, d2, atol=0)
+    print("SHARDED_PLAN_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_plan_multidevice_subprocess():
+    """On a >=2-device mesh the encoded values are actually distributed
+    (more than one shard device), not replicated.  Runs in a subprocess
+    because device count locks at first jax init."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SHARDED_PLAN_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert "SHARDED_PLAN_OK" in out.stdout, out.stderr[-3000:]
+
+
+# ---------------------------------------------------------------------------
+# Eager-path encoding cache lifecycle
+# ---------------------------------------------------------------------------
+
+def test_enc_cache_evicts_on_weight_gc():
+    """The id()-keyed weakref caches drop entries when the source weights
+    are garbage-collected (id reuse would otherwise serve stale encodings),
+    and never fire on plan-driven paths."""
+    from repro.core.pruning import to_balanced_sparse
+    from repro.kernels import ops
+    ops._ENC_CACHE.clear()
+    ops._KB_CACHE.clear()
+    x = jax.random.normal(jax.random.key(0), (4, 64))
+    sp = to_balanced_sparse(jax.random.normal(jax.random.key(1), (16, 64)),
+                            k=8)
+    jax.block_until_ready(ops.balanced_spmm(x, sp.values, sp.indices,
+                                            n_in=64, impl="pallas"))
+    assert len(ops._ENC_CACHE) == 1 and len(ops._KB_CACHE) == 1
+    # a second call on live weights is a hit, not a second entry
+    jax.block_until_ready(ops.balanced_spmm(x, sp.values, sp.indices,
+                                            n_in=64, impl="pallas"))
+    assert len(ops._ENC_CACHE) == 1
+    del sp
+    gc.collect()
+    assert not ops._ENC_CACHE, "entry must evict when source weights die"
+    assert not ops._KB_CACHE
+    # the planned path never touches either cache
+    _, _, lp = _fc_plan(impl="pallas")
+    jax.block_until_ready(engine_execute.apply_fc(
+        jax.random.normal(jax.random.key(2), (4, 96)), lp))
+    assert not ops._ENC_CACHE and not ops._KB_CACHE
+
+
 def test_serve_smoke_sparse_path_end_to_end():
     """The acceptance gate in-tree: serve executes the balanced-sparse
     kernels (plan stats > 0) and reports the dataflow mode mix."""
@@ -178,6 +434,32 @@ def test_serve_smoke_sparse_path_end_to_end():
     assert results["plan"]["sparse_layers"] > 0
     assert results["plan"]["engine_stats"].get("balanced_spmm", 0) > 0
     assert "ON_CHIP" in results["plan"]["mode_mix"]
+    assert results["sparse"]["tokens_per_s"] > 0
+
+
+def test_serve_moe_expert_path_end_to_end():
+    """Acceptance: serve on an MoE config dispatches the per-expert
+    balanced kernels (engine stats != 0) with sparse-vs-masked-dense
+    logits parity (checked inside serve.main)."""
+    from repro.launch import serve
+    results = serve.main(["--arch", "deepseek-moe-16b", "--smoke",
+                          "--batch", "2", "--prompt-len", "16",
+                          "--gen-steps", "2", "--sparsity", "0.5"])
+    assert results["plan"]["family"] == "moe"
+    assert results["plan"]["engine_stats"].get("expert_balanced_spmm", 0) > 0
+    assert results["plan"]["sparse_layers"] > 0
+    assert results["sparse"]["tokens_per_s"] > 0
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-1.2b"])
+def test_serve_recurrent_families_end_to_end(arch):
+    """RWKV6 / Zamba2 no longer fall back to dense-only serving: the plan
+    executes the balanced kernels on the real token path."""
+    from repro.launch import serve
+    results = serve.main(["--arch", arch, "--smoke", "--batch", "2",
+                          "--prompt-len", "16", "--gen-steps", "2",
+                          "--sparsity", "0.5"])
+    assert results["plan"]["engine_stats"].get("balanced_spmm", 0) > 0
     assert results["sparse"]["tokens_per_s"] > 0
 
 

@@ -139,6 +139,102 @@ def test_tiled_grads_match_dense_nonaligned():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("impl", ["pallas", "xla", "xla_gather"])
+def test_balanced_spmm_grads_match_masked_dense_all_impls(impl):
+    """The custom VJP is impl-independent: every impl's grads == the
+    masked-dense VJP (w densified from the same balanced pattern)."""
+    m, n, o, k = 12, 96, 18, 24
+    x = rand(20, (m, n), jnp.float32)
+    sp = to_balanced_sparse(rand(21, (o, n), jnp.float32), k=k)
+
+    def f_sparse(x, vals):
+        return jnp.sum(ops.balanced_spmm(x, vals, sp.indices, n_in=n,
+                                         impl=impl) ** 2)
+
+    def f_masked_dense(x, vals):
+        w = ref.balanced_dense(vals, sp.indices, n)
+        return jnp.sum((x @ w.T) ** 2)
+
+    gx1, gv1 = jax.grad(f_sparse, argnums=(0, 1))(x, sp.values)
+    gx2, gv2 = jax.grad(f_masked_dense, argnums=(0, 1))(x, sp.values)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               rtol=1e-4, atol=1e-4, err_msg=impl)
+    np.testing.assert_allclose(np.asarray(gv1), np.asarray(gv2),
+                               rtol=1e-4, atol=1e-4, err_msg=impl)
+
+
+def test_tiled_spmm_pad_slot_grads_zero_and_match_masked_dense():
+    """The pre-encoded entry's VJP projects gradients off the KB padding
+    slots: pad slots (index 0 beyond the block count) get exactly zero
+    grad — they are structural zeros, not weights — and valid slots match
+    the masked-dense VJP."""
+    from repro.kernels.tile_format import (TiledBalanced, encode_tiled,
+                                           max_block_count, tiled_to_dense)
+    m, n, o, k, bn = 20, 100, 24, 30, 32
+    x = rand(22, (m, n), jnp.float32)
+    sp = to_balanced_sparse(rand(23, (o, n), jnp.float32), k=k)
+    kb = max_block_count(sp.indices, n, bn) + 16          # force pad slots
+    tb = encode_tiled(sp.values, sp.indices, n, bn=bn, kb=kb)
+    valid = (jnp.arange(kb)[None, None, :]
+             < tb.counts[..., None]).astype(jnp.float32)
+    assert float(valid.mean()) < 1.0, "test needs real padding slots"
+
+    def f_tiled(x, values):
+        t = TiledBalanced(values, tb.indices, tb.counts, n_in=n, bn=bn)
+        return jnp.sum(ops.tiled_spmm(x, t) ** 2)
+
+    def f_masked_dense(x, values):
+        # the masked-dense reference: pad slots masked out *before* the
+        # densify, so its autodiff grads are zero there by construction
+        t = TiledBalanced(values * valid, tb.indices, tb.counts,
+                          n_in=n, bn=bn)
+        return jnp.sum((x @ tiled_to_dense(t).T) ** 2)
+
+    gx1, gv1 = jax.grad(f_tiled, argnums=(0, 1))(x, tb.values)
+    gx2, gv2 = jax.grad(f_masked_dense, argnums=(0, 1))(x, tb.values)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gv1), np.asarray(gv2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(gv1 * (1.0 - valid)), 0.0)
+
+
+def test_tiled_spmm_batched_matches_per_group():
+    """The batched pre-encoded entry (expert path) == one tiled_spmm per
+    group, forward and backward."""
+    from repro.kernels.tile_format import TiledBalanced, encode_tiled
+    g, m, n, o, k, bn = 3, 9, 64, 16, 16, 32
+    xs = rand(24, (g, m, n), jnp.float32)
+    sps = [to_balanced_sparse(rand(25 + i, (o, n), jnp.float32), k=k)
+           for i in range(g)]
+    kb = 24
+    tbs = [encode_tiled(s.values, s.indices, n, bn=bn, kb=kb) for s in sps]
+    tb = TiledBalanced(jnp.stack([t.values for t in tbs]),
+                       jnp.stack([t.indices for t in tbs]),
+                       jnp.stack([t.counts for t in tbs]), n_in=n, bn=bn)
+    got = ops.tiled_spmm_batched(xs, tb)
+    want = jnp.stack([ops.tiled_spmm(xs[i], tbs[i]) for i in range(g)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+    def f_batched(xs, values):
+        t = TiledBalanced(values, tb.indices, tb.counts, n_in=n, bn=bn)
+        return jnp.sum(ops.tiled_spmm_batched(xs, t) ** 2)
+
+    def f_per_group(xs, values):
+        return sum(jnp.sum(ops.tiled_spmm(
+            xs[i], TiledBalanced(values[i], tb.indices[i], tb.counts[i],
+                                 n_in=n, bn=bn)) ** 2) for i in range(g))
+
+    gx1, gv1 = jax.grad(f_batched, argnums=(0, 1))(xs, tb.values)
+    gx2, gv2 = jax.grad(f_per_group, argnums=(0, 1))(xs, tb.values)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gv1), np.asarray(gv2),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_choose_blocks_respects_vmem_budget():
     c = ops.choose_blocks(4096, 4096, 8192, 4096, itemsize=4,
                           vmem_budget=1 << 20)

@@ -72,6 +72,61 @@ def test_from_mask_rejects_imbalanced():
 
 
 # ---------------------------------------------------------------------------
+# tile-local balanced format invariants (kernels/tile_format.py)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(2, 70), st.integers(1, 12),
+       st.sampled_from([8, 16, 32]), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["float32", "bfloat16", "float16"]))
+def test_tiled_encode_decode_roundtrip(o, n, k, bn, seed, dtype):
+    """encode_tiled/tiled_to_dense round-trip is exact for arbitrary
+    balanced patterns, including non-divisible N/bn and zero-count blocks,
+    and preserves the value dtype bit-for-bit."""
+    from repro.kernels.tile_format import encode_tiled, tiled_to_dense
+    k = min(k, n)
+    w = jnp.asarray(np.random.default_rng(seed).standard_normal((o, n))
+                    ).astype(jnp.dtype(dtype))
+    sp = to_balanced_sparse(w, k=k)
+    tb = encode_tiled(sp.values, sp.indices, n, bn=bn)
+    # dtype preservation (values exactly, indices/counts int32)
+    assert tb.values.dtype == sp.values.dtype
+    assert tb.indices.dtype == jnp.int32 and tb.counts.dtype == jnp.int32
+    # geometry: covers the non-divisible tail block
+    assert tb.nb == -(-n // bn)
+    assert int(jnp.max(tb.indices)) < bn
+    # per-row totals preserve the balance invariant K
+    np.testing.assert_array_equal(np.asarray(jnp.sum(tb.counts, axis=1)),
+                                  np.full(o, k))
+    # exact round-trip (scatter/gather moves bits, never arithmetic)
+    np.testing.assert_array_equal(np.asarray(tiled_to_dense(tb)),
+                                  np.asarray(sp.to_dense()))
+    # zero-count blocks decode to all-zero columns
+    counts = np.asarray(tb.counts)
+    dense = np.asarray(tiled_to_dense(tb))
+    for r, b in zip(*np.nonzero(counts == 0)):
+        lo, hi = b * bn, min((b + 1) * bn, n)
+        assert not dense[r, lo:hi].any()
+
+
+@given(st.integers(1, 6), st.integers(4, 60), st.integers(1, 8),
+       st.sampled_from([8, 16]), st.integers(0, 8), st.integers(0, 2 ** 31 - 1))
+def test_tiled_kb_padding_never_changes_decode(o, n, k, bn, slack, seed):
+    """Any KB >= the measured per-block max yields the same decode: pad
+    slots are structural zeros (value 0, index 0)."""
+    from repro.kernels.tile_format import (encode_tiled, max_block_count,
+                                           tiled_to_dense)
+    k = min(k, n)
+    w = jnp.asarray(np.random.default_rng(seed).standard_normal((o, n)),
+                    jnp.float32)
+    sp = to_balanced_sparse(w, k=k)
+    kb0 = max_block_count(sp.indices, n, bn)
+    tb = encode_tiled(sp.values, sp.indices, n, bn=bn, kb=kb0 + slack)
+    assert tb.kb == kb0 + slack
+    np.testing.assert_array_equal(np.asarray(tiled_to_dense(tb)),
+                                  np.asarray(sp.to_dense()))
+
+
+# ---------------------------------------------------------------------------
 # clustering invariants
 # ---------------------------------------------------------------------------
 
