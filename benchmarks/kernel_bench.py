@@ -47,6 +47,7 @@ from jax.experimental import pallas as pl                     # noqa: E402
 
 from repro.core.pruning import to_balanced_sparse             # noqa: E402
 from repro.kernels import ops, ref                            # noqa: E402
+from repro.kernels.autotune import bench_time as timeit       # noqa: E402
 from repro.models.cnn import (alexnet_layers, resnet50_layers,  # noqa: E402
                               vgg16_layers)
 
@@ -122,16 +123,6 @@ def conv_gemm_shapes(layers, *, m_cap: int, max_layers: int):
         if len(out) >= max_layers:
             break
     return out
-
-
-def timeit(fn, *args, iters: int, warmup: int = 1):
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
 
 
 def bench_network(net: str, layers, *, m_cap, max_layers, iters,

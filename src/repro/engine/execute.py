@@ -39,15 +39,34 @@ def stats() -> dict:
     return dict(STATS)
 
 
+def _count_dispatch(spec, *extra: str) -> None:
+    """Record one balanced-sparse dispatch: the kernel family, the impl,
+    and — when the plan's `BlockChoice` came from the measured autotuner
+    rather than the static VMEM model — a ``tuned_blocks`` tick, so serve
+    (and tests) can observe that tuned choices reached the execute path."""
+    STATS["balanced_spmm"] += 1
+    STATS[f"impl_{spec.impl}"] += 1
+    if spec.tuned != "static":
+        STATS["tuned_blocks"] += 1
+    for name in extra:
+        STATS[name] += 1
+
+
 def apply_fc(x: Array, lp: LayerPlan) -> Array:
-    """y = x @ W.T for a planned linear layer; x: [..., N] -> [..., O]."""
+    """``y = x @ W.T`` for one planned linear layer.
+
+    ``x``: ``[..., N]`` -> ``[..., O]``.  Dispatches on ``lp.spec.impl``:
+    ``dense`` is a plain matmul on the masked weights; ``pallas`` runs the
+    pre-encoded `kernels.ops.tiled_spmm` at the plan's (possibly autotuned)
+    ``spec.blocks``; ``xla``/``xla_gather`` run the flat-format
+    `kernels.ops.balanced_spmm` fallbacks.
+    """
     spec = lp.spec
     if spec.impl == "dense":
         STATS["dense_matmul"] += 1
         return jnp.dot(x, lp.weights.T,
                        preferred_element_type=jnp.float32).astype(x.dtype)
-    STATS["balanced_spmm"] += 1
-    STATS[f"impl_{spec.impl}"] += 1
+    _count_dispatch(spec)
     if spec.impl == "pallas":
         blk = spec.blocks
         return kernel_ops.tiled_spmm(x, lp.weights, block_m=blk.bm,
@@ -58,13 +77,15 @@ def apply_fc(x: Array, lp: LayerPlan) -> Array:
 
 
 def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
-    """Per-expert planned projection: x [E, ..., N] -> [E, ..., O].
+    """Per-expert planned projection: ``x [E, ..., N] -> [E, ..., O]``.
 
     ``lp.weights`` carry a leading expert axis (plan built from a rank-3
     ``[E, d, f]`` MoE tensor, scan-sliced to one layer).  The Pallas impl
     scans `kernels.ops.tiled_spmm_batched` over E (pre-encoded, decode
     inside the kernel); the XLA fallbacks scan the flat-format
-    `balanced_spmm` the same way.
+    `kernels.ops.balanced_spmm` the same way.  Counts
+    ``expert_balanced_spmm`` in `STATS` so MoE serving can assert the
+    per-expert path dispatched.
     """
     spec = lp.spec
     if spec.impl == "dense":
@@ -72,9 +93,7 @@ def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
         return jnp.einsum("e...n,eon->e...o", x,
                           lp.weights.astype(x.dtype),
                           preferred_element_type=jnp.float32).astype(x.dtype)
-    STATS["balanced_spmm"] += 1
-    STATS["expert_balanced_spmm"] += 1
-    STATS[f"impl_{spec.impl}"] += 1
+    _count_dispatch(spec, "expert_balanced_spmm")
     if spec.impl == "pallas":
         blk = spec.blocks
         return kernel_ops.tiled_spmm_batched(x, lp.weights, block_m=blk.bm,
@@ -91,7 +110,10 @@ def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
 
 
 def apply_conv(x: Array, lp: LayerPlan) -> Array:
-    """NHWC convolution for a planned conv layer."""
+    """NHWC convolution for a planned conv layer: dense plans convolve the
+    masked 4-D weights directly; sparse plans lower to the streamed
+    im2col + balanced GEMM in `kernels.sparse_conv.sparse_conv2d` with the
+    plan's pre-encoded weights and block choice."""
     spec = lp.spec
     if spec.impl == "dense":
         STATS["dense_conv"] += 1
@@ -102,8 +124,7 @@ def apply_conv(x: Array, lp: LayerPlan) -> Array:
             x, lp.weights.transpose(2, 3, 1, 0).astype(x.dtype),
             (spec.stride, spec.stride), pad,
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    STATS["balanced_spmm"] += 1
-    STATS[f"impl_{spec.impl}"] += 1
+    _count_dispatch(spec)
     if spec.impl == "pallas":
         tb = lp.weights
         blk = spec.blocks

@@ -50,6 +50,7 @@ import numpy as np
 from ..core.dataflow import LayerSpec, choose_dataflow
 from ..core.pruning import BalancedSparse, keep_count
 from ..core.sparse_ops import SparseLinearSpec
+from ..kernels import autotune
 from ..kernels import ops as kernel_ops
 from ..kernels.tile_format import (_KB_ROUND, _round_up, TiledBalanced,
                                    encode_tiled, tiled_to_dense)
@@ -122,6 +123,15 @@ class PlanSpec:
     conv_padding: Any = "SAME"      # "SAME" | "VALID" | int
     experts: int = 0                # per-layer expert count (MoE tensors);
                                     # 0 = plain stacked projection
+    tuned: str = "static"           # where ``blocks`` came from: "static"
+                                    # (the VMEM model), "cached" (warm
+                                    # autotune cache), "swept" (measured
+                                    # during this plan build)
+    blocks_static: kernel_ops.BlockChoice | None = None
+                                    # the static model's prior for this
+                                    # layer's resolve key (None when
+                                    # ``blocks`` is; equals ``blocks``
+                                    # when tuned == "static")
 
     @property
     def is_sparse(self) -> bool:
@@ -218,6 +228,20 @@ class ModelPlan:
             mix[lp.spec.impl] = mix.get(lp.spec.impl, 0) + 1
         return mix
 
+    def tuned_mix(self) -> Dict[str, int]:
+        """Where each planned layer's `BlockChoice` came from
+        (static model / warm autotune cache / fresh sweep)."""
+        mix: Dict[str, int] = {}
+        for lp in self.layers.values():
+            mix[lp.spec.tuned] = mix.get(lp.spec.tuned, 0) + 1
+        return mix
+
+    def tune_deltas(self) -> Tuple:
+        """``(name, tuned (bm, bo, bn), static (bm, bo, bn))`` triples for
+        layers whose measured choice differs from the static model, as
+        recorded at build time (`meta` key ``tune_deltas``)."""
+        return dict(self.meta).get("tune_deltas", ())
+
     @property
     def sparse_layer_count(self) -> int:
         return sum(1 for lp in self.layers.values() if lp.spec.is_sparse)
@@ -230,7 +254,8 @@ class ModelPlan:
             lines.append(f"{name:14s} {s.mode:>8s} {s.impl:>10s} "
                          f"{s.n_out:6d} {s.n_in:6d} {s.k:6d} "
                          f"{s.w_sparsity:6.2f} {s.d_mem_bits / 1e3:9.0f}")
-        lines.append(f"mode mix {self.mode_mix()}  impl mix {self.impl_mix()}")
+        lines.append(f"mode mix {self.mode_mix()}  impl mix {self.impl_mix()}"
+                     f"  blocks {self.tuned_mix()}")
         return "\n".join(lines)
 
 
@@ -264,9 +289,10 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                      weight_buffer_bits: int | None = None,
                      n_is: int = 7, n_pe: int = 32,
                      dtype=None, stride: int = 1,
-                     conv_padding: Any = "SAME") -> LayerPlan:
-    """Derive one LayerPlan from a dense weight (output-major [O, N] for fc,
-    [Co, Ci, Hk, Wk] for conv) and an optional pruning mask.
+                     conv_padding: Any = "SAME", tune: str = "off",
+                     tune_cache: str | None = None) -> LayerPlan:
+    """Derive one LayerPlan from a dense weight (output-major ``[O, N]`` for
+    fc, ``[Co, Ci, Hk, Wk]`` for conv) and an optional pruning mask.
 
     The pattern (``mask``, or the nonzero structure of a concrete ``w``)
     must be concrete; ``w``'s values may be tracers.  ``impl`` overrides the
@@ -274,6 +300,13 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
     unanalyzable (traced values, no mask) — the mask is still applied.
     ``m_hint`` is the GEMM M the block autotuner optimizes for (execute
     re-derives bm for other batch sizes).
+
+    ``tune`` selects the block-choice policy (`kernels.autotune.
+    resolve_blocks`): ``"off"`` uses the static VMEM model, ``"cached"``
+    consults the measured autotune cache at ``tune_cache`` (default
+    `autotune.default_cache_path`) and falls back to the static model on a
+    miss, ``"sweep"`` additionally times candidates and persists the winner
+    on a miss.  The provenance lands in ``PlanSpec.tuned``.
     """
     # Pattern analysis runs in pure NumPy: inside a jit trace every jnp op
     # stages (omnistaging) even on concrete operands, and the pattern must
@@ -335,6 +368,8 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
     dt = dtype or w2.dtype
     blocks = None
     block_k = 0
+    tuned = "static"
+    blocks_static = None
     if impl == "dense":
         # conv keeps the 4-D layout apply_conv convolves with
         masked = (w * mask_np if mask_np is not None else w) if w.ndim == 4 \
@@ -343,7 +378,10 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
         k = n
     else:
         itemsize = jnp.dtype(dt).itemsize
-        blocks = kernel_ops.choose_blocks(m_hint, o, n, k, itemsize=itemsize)
+        res = autotune.resolve_blocks(m_hint, o, n, k, itemsize=itemsize,
+                                      impl=impl, tune=tune,
+                                      cache_path=tune_cache)
+        blocks, tuned, blocks_static = res.blocks, res.source, res.static
         idx = _pattern_indices(pattern, k)                # np [O, K] int32
         vals = jnp.take_along_axis(jnp.asarray(masked2),
                                    jnp.asarray(idx), axis=1).astype(dt)
@@ -361,20 +399,25 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                     blocks=blocks, w_sparsity=float(w_sparsity),
                     d_mem_bits=int(flow.d_mem_bits), i_mem_bits=int(flow.i_mem),
                     w_mem_bits=int(flow.w_mem), hk=hk, wk=wk, stride=stride,
-                    conv_padding=conv_padding)
+                    conv_padding=conv_padding, tuned=tuned,
+                    blocks_static=blocks_static)
     return LayerPlan(spec=spec, weights=weights)
 
 
 def plan_from_balanced(sp: BalancedSparse, *, name: str = "adhoc",
                        impl: str = "pallas", block_k: int | None = None,
-                       m_hint: int = 128, ifm_sparsity: float = 0.0
+                       m_hint: int = 128, ifm_sparsity: float = 0.0,
+                       tune: str = "off", tune_cache: str | None = None
                        ) -> LayerPlan:
     """Wrap an existing flat BalancedSparse as a single-layer plan (the
     `core.sparse_ops` delegation path).  Indices must be concrete."""
     o, k = sp.values.shape
     n = sp.n_in
     itemsize = jnp.dtype(sp.values.dtype).itemsize
-    blocks = kernel_ops.choose_blocks(m_hint, o, n, k, itemsize=itemsize)
+    res = autotune.resolve_blocks(m_hint, o, n, k, itemsize=itemsize,
+                                  impl=impl, tune=tune,
+                                  cache_path=tune_cache)
+    blocks = res.blocks
     if impl == "pallas":
         if block_k is None:
             from ..kernels.tile_format import max_block_count
@@ -393,7 +436,8 @@ def plan_from_balanced(sp: BalancedSparse, *, name: str = "adhoc",
                     n_in=n, n_out=o, k=k, block_k=block_k or 0,
                     blocks=blocks, w_sparsity=w_sparsity,
                     d_mem_bits=int(flow.d_mem_bits), i_mem_bits=int(flow.i_mem),
-                    w_mem_bits=int(flow.w_mem))
+                    w_mem_bits=int(flow.w_mem), tuned=res.source,
+                    blocks_static=res.static)
     return LayerPlan(spec=spec, weights=weights)
 
 
@@ -404,7 +448,8 @@ def plan_from_balanced(sp: BalancedSparse, *, name: str = "adhoc",
 def plan_smallcnn(cfg, params: dict, masks: dict | None = None, *,
                   impl: str | None = None, ifm_sparsity: float = 0.0,
                   weight_buffer_bits: int | None = None,
-                  m_hint: int = 4096) -> ModelPlan:
+                  m_hint: int = 4096, tune: str = "off",
+                  tune_cache: str | None = None) -> ModelPlan:
     """One offline pass over the small CNN: conv layers with balanced masks
     go through the sparse conv path, balanced fc masks through the balanced
     GEMM, everything else stays dense (mask still applied)."""
@@ -420,14 +465,17 @@ def plan_smallcnn(cfg, params: dict, masks: dict | None = None, *,
         layers[name] = build_layer_plan(
             name, params[name], mask=masks.get(name), layer_spec=geom,
             m_hint=m_hint, impl=impl, ifm_sparsity=ifm_sparsity,
-            weight_buffer_bits=weight_buffer_bits, conv_padding="SAME")
+            weight_buffer_bits=weight_buffer_bits, conv_padding="SAME",
+            tune=tune, tune_cache=tune_cache)
         cin = cout
     for name in ("fc1", "fc2"):
         layers[name] = build_layer_plan(
             name, params[name], mask=masks.get(name), kind="fc",
             m_hint=m_hint, impl=impl, ifm_sparsity=ifm_sparsity,
-            weight_buffer_bits=weight_buffer_bits)
-    return ModelPlan(layers=layers, meta=(("model", "smallcnn"),))
+            weight_buffer_bits=weight_buffer_bits, tune=tune,
+            tune_cache=tune_cache)
+    meta = (("model", "smallcnn"),) + _tune_meta(tune, layers)
+    return ModelPlan(layers=layers, meta=meta)
 
 
 # The projection families the planner can prune, per model family: every
@@ -446,7 +494,8 @@ ZAMBA2_PROJ_NAMES = ("z_proj", "x_proj", "out_proj")
 
 
 def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
-                  m_hint: int, cd) -> LayerPlan:
+                  m_hint: int, cd, tune: str = "off",
+                  tune_cache: str | None = None) -> LayerPlan:
     """Plan one stacked projection ``[*lead, n_in, n_out]``.
 
     ``lead`` is any tuple of stacked axes — ``(L,)`` for scanned layers,
@@ -454,9 +503,10 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
     output-major, balanced-pruned along the input dim (equal NZE per output
     channel — the Sense invariant), encoded to the impl's native format
     with a *shared* `BlockChoice`/KB across all slices (one static spec for
-    the whole stack), and restacked on the leading axes so `lax.scan` /
-    the expert loop can slice per-layer weights while the spec rides as
-    aux data.
+    the whole stack; the choice comes from `kernels.autotune.resolve_blocks`
+    under the ``tune`` policy), and restacked on the leading axes so
+    `lax.scan` / the expert loop can slice per-layer weights while the spec
+    rides as aux data.
     """
     lead = w.shape[:-2]
     n_in, n_out = w.shape[-2:]
@@ -475,14 +525,18 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
     order = jnp.argsort(-jnp.abs(wt), axis=-1, stable=True)
     ranks = jnp.argsort(order, axis=-1, stable=True)
     masks = np.asarray(ranks < k)                         # [g, O, N] bool
+    tuned = "static"
+    blk_static = None
     if impl_nm == "dense":
         weights: Any = (wt * masks).reshape(*lead, n_out, n_in)
         blk = None
         block_k = 0
     else:
         itemsize = cd.itemsize
-        blk = kernel_ops.choose_blocks(m_hint, n_out, n_in, k,
-                                       itemsize=itemsize)
+        res = autotune.resolve_blocks(m_hint, n_out, n_in, k,
+                                      itemsize=itemsize, impl=impl_nm,
+                                      tune=tune, cache_path=tune_cache)
+        blk, tuned, blk_static = res.blocks, res.source, res.static
         block_k = max(_KB_ROUND, _round_up(
             mask_block_k(masks.reshape(g * n_out, n_in), bn=blk.bn),
             _KB_ROUND))
@@ -514,8 +568,28 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                     d_mem_bits=int(flow.d_mem_bits) * g,
                     i_mem_bits=int(flow.i_mem) * g,
                     w_mem_bits=int(flow.w_mem) * g,
-                    experts=experts)
+                    experts=experts, tuned=tuned, blocks_static=blk_static)
     return LayerPlan(spec=spec, weights=weights)
+
+
+def _tune_meta(tune: str, layers: Dict[str, LayerPlan]) -> Tuple:
+    """Hashable meta entries recording the tune policy and the per-layer
+    tuned-vs-static `BlockChoice` deltas (each spec carries the static
+    prior the resolver actually computed, `PlanSpec.blocks_static`)."""
+    if tune == "off":
+        return ()
+    deltas = []
+    for nm in sorted(layers):
+        s = layers[nm].spec
+        if s.blocks is None or s.blocks_static is None \
+                or s.tuned == "static":
+            continue
+        stat = s.blocks_static
+        if (s.blocks.bm, s.blocks.bo, s.blocks.bn) != \
+                (stat.bm, stat.bo, stat.bn):
+            deltas.append((nm, (s.blocks.bm, s.blocks.bo, s.blocks.bn),
+                           (stat.bm, stat.bo, stat.bn)))
+    return (("tune", tune), ("tune_deltas", tuple(deltas)))
 
 
 def _resolve_sparsity(cfg, sparsity: float | None) -> float:
@@ -528,7 +602,8 @@ def _resolve_sparsity(cfg, sparsity: float | None) -> float:
 def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
                      impl: str | None = None, include_mlp: bool = True,
                      include_experts: bool = True,
-                     m_hint: int | None = None) -> ModelPlan:
+                     m_hint: int | None = None, tune: str = "off",
+                     tune_cache: str | None = None) -> ModelPlan:
     """Offline plan for a transformer's projection matrices.
 
     Stacked 2-D projections ``[L, n_in, n_out]`` go through `_plan_stacked`;
@@ -538,7 +613,8 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
     inside the kernel path (`engine.execute.apply_expert_fc`).  GEMV-shaped
     serving projections are ON_CHIP under §V-C — every weight is read once —
     so the mode mix here is the paper's FC story; the CNN planners exercise
-    RIF/RWF.
+    RIF/RWF.  ``tune``/``tune_cache`` select the block-choice policy (see
+    `build_layer_plan`).
     """
     sparsity = _resolve_sparsity(cfg, sparsity)
     blocks = params["blocks"]
@@ -553,21 +629,24 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
         if w.ndim != 3:
             continue
         layers[nm] = _plan_stacked(nm, w, sparsity=sparsity, impl=impl,
-                                   m_hint=m_hint, cd=cd)
+                                   m_hint=m_hint, cd=cd, tune=tune,
+                                   tune_cache=tune_cache)
     if include_mlp and include_experts and cfg.family == "moe":
         for nm in MOE_EXPERT_NAMES:
             w = blocks.get(nm)
             if w is None or w.ndim != 4:
                 continue
             layers[nm] = _plan_stacked(nm, w, sparsity=sparsity, impl=impl,
-                                       m_hint=m_hint, cd=cd)
-    return ModelPlan(layers=layers,
-                     meta=(("model", cfg.name), ("sparsity", float(sparsity)),
-                           ("n_layers", int(cfg.n_layers))))
+                                       m_hint=m_hint, cd=cd, tune=tune,
+                                       tune_cache=tune_cache)
+    meta = (("model", cfg.name), ("sparsity", float(sparsity)),
+            ("n_layers", int(cfg.n_layers))) + _tune_meta(tune, layers)
+    return ModelPlan(layers=layers, meta=meta)
 
 
 def plan_rwkv6(cfg, params: dict, *, sparsity: float | None = None,
-               impl: str | None = None, m_hint: int | None = None
+               impl: str | None = None, m_hint: int | None = None,
+               tune: str = "off", tune_cache: str | None = None
                ) -> ModelPlan:
     """Offline plan for the RWKV6 projection family (R/K/V/G/O time-mix
     plus channel-mix matrices).  The WKV recurrence itself is elementwise
@@ -578,15 +657,17 @@ def plan_rwkv6(cfg, params: dict, *, sparsity: float | None = None,
     cd = jnp.dtype(cfg.compute_dtype)
     m_hint = m_hint or 256
     layers = {nm: _plan_stacked(nm, blocks[nm], sparsity=sparsity, impl=impl,
-                                m_hint=m_hint, cd=cd)
+                                m_hint=m_hint, cd=cd, tune=tune,
+                                tune_cache=tune_cache)
               for nm in RWKV6_PROJ_NAMES if nm in blocks}
-    return ModelPlan(layers=layers,
-                     meta=(("model", cfg.name), ("sparsity", float(sparsity)),
-                           ("n_layers", int(cfg.n_layers))))
+    meta = (("model", cfg.name), ("sparsity", float(sparsity)),
+            ("n_layers", int(cfg.n_layers))) + _tune_meta(tune, layers)
+    return ModelPlan(layers=layers, meta=meta)
 
 
 def plan_zamba2(cfg, params: dict, *, sparsity: float | None = None,
-                impl: str | None = None, m_hint: int | None = None
+                impl: str | None = None, m_hint: int | None = None,
+                tune: str = "off", tune_cache: str | None = None
                 ) -> ModelPlan:
     """Offline plan for the Zamba2 Mamba-block in/out projections (z/x in,
     out_proj).  The SSD recurrence, depthwise convs and the small B/C/dt
@@ -597,18 +678,24 @@ def plan_zamba2(cfg, params: dict, *, sparsity: float | None = None,
     cd = jnp.dtype(cfg.compute_dtype)
     m_hint = m_hint or 256
     layers = {nm: _plan_stacked(nm, blocks[nm], sparsity=sparsity, impl=impl,
-                                m_hint=m_hint, cd=cd)
+                                m_hint=m_hint, cd=cd, tune=tune,
+                                tune_cache=tune_cache)
               for nm in ZAMBA2_PROJ_NAMES if nm in blocks}
-    return ModelPlan(layers=layers,
-                     meta=(("model", cfg.name), ("sparsity", float(sparsity)),
-                           ("n_layers", int(cfg.n_layers))))
+    meta = (("model", cfg.name), ("sparsity", float(sparsity)),
+            ("n_layers", int(cfg.n_layers))) + _tune_meta(tune, layers)
+    return ModelPlan(layers=layers, meta=meta)
 
 
 def plan_model(cfg, params: dict, **kwargs) -> ModelPlan:
     """Family dispatcher: one entry point for every servable architecture.
 
     Transformer families (dense/moe/audio/vlm) -> `plan_transformer`;
-    ssm -> `plan_rwkv6`; hybrid -> `plan_zamba2`.
+    ssm -> `plan_rwkv6`; hybrid -> `plan_zamba2`.  Keyword arguments are
+    forwarded to the family planner unchanged — in particular ``sparsity``,
+    ``impl``, ``m_hint``, and the measured-autotuning knobs ``tune``
+    (``"off" | "cached" | "sweep"``) and ``tune_cache`` (cache file path);
+    ``include_mlp``/``include_experts`` apply to transformer families only
+    and are dropped for the recurrent planners.
     """
     from ..models.api import TRANSFORMER_FAMILIES
     if cfg.family in TRANSFORMER_FAMILIES:

@@ -1,10 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Responsibilities: tile-alignment padding, block-size *autotuning* (pick
-bm/bo/bn from shapes and a VMEM budget instead of hard-coded 128s), weight
-encoding into the tile-local balanced format with a per-weight-id cache, a
-differentiable path (Pallas forward + jnp backward via custom_vjp), and XLA
-fallbacks:
+Responsibilities: tile-alignment padding, the *static* block-size model
+(`choose_blocks`: pick bm/bo/bn from shapes and a VMEM budget instead of
+hard-coded 128s — the measured sweep-and-cache layer on top lives in
+`kernels/autotune.py`), weight encoding into the tile-local balanced format
+with a per-weight-id cache, a differentiable path (Pallas forward + jnp
+backward via custom_vjp), and XLA fallbacks:
 
 * ``impl="pallas"``     — tile-local decode-and-matmul kernel (MXU-native;
                           interpret mode on CPU)
@@ -75,6 +76,14 @@ def _tiled_footprint(bm: int, bo: int, bn: int, kb: int, itemsize: int) -> int:
             + bo * bn * 4 + bm * bo * 4)
 
 
+def _tiled_kb_est(n: int, k: int, bn: int) -> int:
+    """Balanced-invariant KB estimate for the tiled footprint model:
+    per-block counts concentrate at K * bn / N, with 50% slack (the
+    encoder measures the real value).  Shared with `kernels.autotune`'s
+    candidate filter so the two stay one formula."""
+    return max(8, min(k, bn, _round_up(int(k * bn / max(n, 1) * 1.5), 8)))
+
+
 def _bitmap_footprint(bm: int, bo: int, bn: int, k: int, itemsize: int) -> int:
     """Per-step VMEM bytes of the bitmap kernel: x tile + bitmap block (int8)
     + full packed row block + offsets column + decoded w_tile (f32) + f32
@@ -88,7 +97,8 @@ def _bitmap_footprint(bm: int, bo: int, bn: int, k: int, itemsize: int) -> int:
 def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
                   vmem_budget: int = _VMEM_BUDGET, kind: str = "tiled",
                   bn: int | None = None) -> BlockChoice:
-    """Pick (bm, bo, bn) for the balanced-sparse kernels.
+    """Pick (bm, bo, bn) for the balanced-sparse kernels — the *static
+    model* (a closed-form VMEM-occupancy prior; no kernel is ever run).
 
     Start from MXU-shaped 128s (shrunk toward small dims so padding stays
     sane), then halve the dimension with the largest footprint share until
@@ -100,6 +110,11 @@ def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
     "bitmap" (bitmap-decode; ``k`` is the static packed width).  Passing
     ``bn`` pins the column-block width — the bitmap format bakes it into the
     encoding (offsets are per-bn-block), so only bm/bo may shrink there.
+
+    The measured layer on top lives in `kernels.autotune`: this model is
+    its fallback and candidate generator, and `autotune.resolve_blocks`
+    (the entry `engine.plan` uses) returns either this choice or a cached/
+    swept winner, per the caller's ``tune`` policy (DESIGN.md §10).
     """
     bm = _pick_block(m, 128)
     bo = _pick_block(o, 128)
@@ -108,7 +123,7 @@ def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
         bn = _pick_block(n, 128)
 
     def kb_est(bn_):
-        return max(8, min(k, bn_, _round_up(int(k * bn_ / max(n, 1) * 1.5), 8)))
+        return _tiled_kb_est(n, k, bn_)
 
     def footprint(bm_, bo_, bn_):
         if kind == "bitmap":
@@ -286,7 +301,13 @@ _balanced_spmm.defvjp(_balanced_fwd, _balanced_bwd)
 
 def balanced_spmm(x: Array, values: Array, indices: Array, *, n_in: int,
                   impl: str = "pallas", block_k: int | None = None) -> Array:
-    """Differentiable balanced-sparse matmul.  x: [..., N] -> [..., O].
+    """Differentiable balanced-sparse matmul on *flat-format* weights
+    (``values[O, K]``, ``indices[O, K]`` over ``n_in`` input columns).
+    ``x``: ``[..., N]`` -> ``[..., O]``.
+
+    This is the eager/ad-hoc entry: the pallas impl encodes to the
+    tile-local format behind a per-weight-id cache on every cold call.
+    Plan-driven serving uses `tiled_spmm` instead (pre-encoded, no cache).
 
     impl: "pallas" (tiled decode-and-matmul kernel, interpret on CPU) |
     "xla" (densify + dot) | "xla_gather" (seed gather+einsum baseline).
@@ -348,12 +369,15 @@ _tiled_spmm.defvjp(_tiled_fwd, _tiled_bwd)
 def tiled_spmm(x: Array, tb: TiledBalanced, *, block_m: int | None = None,
                block_o: int | None = None) -> Array:
     """Differentiable balanced-sparse matmul on a *pre-encoded*
-    `TiledBalanced` weight.  x: [..., N] -> [..., O].
+    `TiledBalanced` weight.  ``x``: ``[..., N]`` -> ``[..., O]``.
 
-    This is the plan-driven entry point (`engine.execute`): the encoding was
+    This is the plan-driven entry point (`engine.execute.apply_fc`
+    dispatches here for ``impl == "pallas"`` with ``block_m``/``block_o``
+    from the plan's — possibly autotuned — `BlockChoice`): the encoding was
     done once offline, so no per-call id()-keyed cache is consulted.  bm is
     re-derived from the actual M (a plan's block choice is made at a prefill
-    M hint; decode steps run the same weights at M = batch).
+    M hint; decode steps run the same weights at M = batch).  It is also
+    the function `kernels.autotune.sweep_blocks` times per candidate.
     """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])

@@ -15,6 +15,13 @@ the per-expert path (`expert_balanced_spmm`) dispatched.  Reports tokens/s
 dense vs sparse, the per-family RIF/RWF/ON_CHIP mode mix and kernel-impl
 mix, a sparse-vs-masked-dense logits parity check, and the compressed
 weight footprint (bitmap format, Fig.8).
+
+``--tune cached|sweep`` routes every layer's `BlockChoice` through the
+measured autotuner (`kernels/autotune.py`): warm cache entries win, cold
+keys fall back to the static VMEM model ("cached") or are swept and
+persisted ("sweep"); the report lists tuned-vs-static choice deltas and
+the per-source mix.  Only the Pallas impl consumes block sizes, so tuning
+bites with ``--impl pallas`` (or auto on real TPU).
 """
 from __future__ import annotations
 
@@ -79,6 +86,16 @@ def main(argv=None):
                          "TPU, xla densify+dot fallback on CPU)")
     ap.add_argument("--attn-only", action="store_true",
                     help="plan only the attention projections, not the MLP")
+    ap.add_argument("--tune", choices=["off", "cached", "sweep"],
+                    default="off",
+                    help="block-choice policy (kernels.autotune): 'cached' "
+                         "uses warm measured winners and falls back to the "
+                         "static VMEM model, 'sweep' measures candidates on "
+                         "cache misses and persists the winners")
+    ap.add_argument("--tune-cache", default=None,
+                    help="autotune cache path (default "
+                         "~/.cache/repro/autotune.json or "
+                         "$REPRO_AUTOTUNE_CACHE)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -94,7 +111,8 @@ def main(argv=None):
     # ---- the offline pass: build the plan once, serve from it ------------
     plan_kwargs = dict(sparsity=args.sparsity,
                        impl=None if args.impl == "auto" else args.impl,
-                       m_hint=args.batch * args.prompt_len)
+                       m_hint=args.batch * args.prompt_len,
+                       tune=args.tune, tune_cache=args.tune_cache)
     from ..models.api import TRANSFORMER_FAMILIES
     if cfg.family in TRANSFORMER_FAMILIES:
         plan_kwargs["include_mlp"] = not args.attn_only
@@ -106,6 +124,12 @@ def main(argv=None):
     print(f"[serve] family={cfg.family} layer plan ({len(plan.layers)} "
           f"projection groups x {cfg.n_layers} layers):")
     print(plan.summary())
+    if args.tune != "off":
+        deltas = plan.tune_deltas()
+        print(f"[serve] tune={args.tune}: block sources {plan.tuned_mix()}; "
+              f"{len(deltas)} tuned choice(s) differ from the static model"
+              + ("".join(f"\n[serve]   {nm}: tuned (bm,bo,bn)={t} "
+                         f"static={s}" for nm, t, s in deltas)))
     assert plan.sparse_layer_count > 0, \
         "plan produced no sparse-kernel layers — sparsity below §VI-F " \
         "thresholds?"
@@ -168,6 +192,9 @@ def main(argv=None):
         "mode_mix": plan.mode_mix(), "impl_mix": plan.impl_mix(),
         "sparse_layers": plan.sparse_layer_count,
         "parity_max_abs_diff": diff, "engine_stats": stats,
+        "tune": {"mode": args.tune, "sources": plan.tuned_mix(),
+                 "deltas": [[nm, list(t), list(s)]
+                            for nm, t, s in plan.tune_deltas()]},
     }
     print(f"[serve] family={cfg.family} planned weight sparsity "
           f"{1 - total_nnz / max(total_numel, 1):.2f}, "

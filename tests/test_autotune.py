@@ -1,0 +1,212 @@
+"""Measured block autotuner (`kernels/autotune.py`): cache round-trips,
+static-model fallback semantics (cold cache, foreign backend, non-tunable
+impls, corrupt files), sweep never-slower-than-static, and plan builds
+with ``tune="cached"`` staying byte-deterministic."""
+import dataclasses
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.engine import execute as engine_execute
+from repro.engine import plan as engine_plan
+from repro.kernels import autotune, ops
+
+# small enough to sweep in interpret mode in seconds, big enough that the
+# candidate set is non-trivial
+SHAPE = dict(m=64, o=48, n=96, k=48)
+
+
+def _resolve(tmp_path, tune, **kw):
+    return autotune.resolve_blocks(
+        SHAPE["m"], SHAPE["o"], SHAPE["n"], SHAPE["k"], itemsize=4,
+        impl=kw.pop("impl", "pallas"), tune=tune,
+        cache_path=str(tmp_path / "cache.json"), **kw)
+
+
+def test_tune_off_is_the_static_model(tmp_path):
+    res = _resolve(tmp_path, "off")
+    static = ops.choose_blocks(**SHAPE, itemsize=4)
+    assert res.source == "static" and res.blocks == static
+    assert not (tmp_path / "cache.json").exists()
+
+
+def test_cold_cache_falls_back_to_static(tmp_path):
+    res = _resolve(tmp_path, "cached")
+    assert res.source == "static"
+    assert res.blocks == ops.choose_blocks(**SHAPE, itemsize=4)
+    # cached mode never writes (plan builds stay side-effect free)
+    assert not (tmp_path / "cache.json").exists()
+
+
+def test_sweep_cache_roundtrip(tmp_path):
+    """write -> reload -> identical BlockChoice, through the versioned
+    on-disk JSON."""
+    res = _resolve(tmp_path, "sweep")
+    assert res.source == "swept"
+    doc = json.loads((tmp_path / "cache.json").read_text())
+    assert doc["version"] == autotune.CACHE_VERSION
+    (key, entry), = doc["entries"].items()
+    assert key == autotune.cache_key(**SHAPE, itemsize=4, impl="pallas")
+    assert jax.default_backend() in key
+    # reload through both tune modes: identical choice, no re-sweep
+    for tune in ("cached", "sweep"):
+        again = _resolve(tmp_path, tune)
+        assert again.source == "cached"
+        assert again.blocks == res.blocks
+    # the persisted winner is the entry itself
+    assert (entry["bm"], entry["bo"], entry["bn"]) == \
+        (res.blocks.bm, res.blocks.bo, res.blocks.bn)
+
+
+def test_sweep_never_slower_than_static(tmp_path):
+    """The static model is always a candidate, so the swept winner's
+    measured time can't exceed the static choice's on this machine."""
+    res = _resolve(tmp_path, "sweep")
+    entry = next(iter(json.loads(
+        (tmp_path / "cache.json").read_text())["entries"].values()))
+    assert entry["time_s"] <= entry["static_time_s"]
+    cands = {(c["bm"], c["bo"], c["bn"]) for c in entry["candidates"]}
+    assert (res.static.bm, res.static.bo, res.static.bn) in cands
+    assert (res.blocks.bm, res.blocks.bo, res.blocks.bn) in cands
+
+
+def test_foreign_backend_cache_misses(tmp_path):
+    """Entries swept on another backend are invisible: the key embeds the
+    backend, so a TPU cache degrades to the static model on CPU."""
+    key = autotune.cache_key(**SHAPE, itemsize=4, impl="pallas",
+                             backend="tpu-imaginary")
+    path = tmp_path / "cache.json"
+    autotune.save_cache({key: {"bm": 8, "bo": 8, "bn": 8, "vmem_bytes": 1,
+                               "source": "sweep"}}, path)
+    res = _resolve(tmp_path, "cached")
+    assert res.source == "static"
+    assert res.blocks == ops.choose_blocks(**SHAPE, itemsize=4)
+
+
+def test_corrupt_or_mismatched_cache_degrades_to_static(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{not json")
+    assert autotune.load_cache(path) == {}
+    assert _resolve(tmp_path, "cached").source == "static"
+    path.write_text(json.dumps({"version": autotune.CACHE_VERSION + 1,
+                                "entries": {"x": {}}}))
+    assert autotune.load_cache(path) == {}
+
+
+def test_entry_level_corruption_degrades_to_static(tmp_path):
+    """Entry-level damage in an otherwise well-formed cache (the file is
+    hand-shippable) reads as a miss, never a crash or a bad BlockChoice."""
+    key = autotune.cache_key(**SHAPE, itemsize=4, impl="pallas")
+    path = tmp_path / "cache.json"
+    for bad in ("junk",                                   # not a dict
+                {"source": "sweep"},                      # missing bm/bo/bn
+                {"source": "sweep", "bm": "x", "bo": 8, "bn": 8},
+                {"source": "sweep", "bm": -8, "bo": 8, "bn": 8},
+                {"bm": 8, "bo": 8, "bn": 8}):             # no sweep source
+        autotune.save_cache({key: bad}, path)
+        res = _resolve(tmp_path, "cached")
+        assert res.source == "static"
+        assert res.blocks == ops.choose_blocks(**SHAPE, itemsize=4)
+
+
+def test_non_tunable_impls_always_resolve_static(tmp_path):
+    """XLA impls take no block parameters — every tune mode returns the
+    static model and never touches the cache."""
+    for impl in ("xla", "xla_gather"):
+        for tune in ("cached", "sweep"):
+            res = _resolve(tmp_path, tune, impl=impl)
+            assert res.source == "static"
+    assert not (tmp_path / "cache.json").exists()
+
+
+def test_candidates_include_static_and_fit_budget():
+    cands = autotune.candidate_blocks(**SHAPE, itemsize=4)
+    static = ops.choose_blocks(**SHAPE, itemsize=4)
+    assert cands[0] == dataclasses.replace(static,
+                                           vmem_bytes=cands[0].vmem_bytes)
+    assert len(cands) == len({(c.bm, c.bo, c.bn) for c in cands})
+    for c in cands[1:]:
+        assert 2 * c.vmem_bytes <= ops._VMEM_BUDGET
+        assert all(v >= 8 for v in (c.bm, c.bo, c.bn))
+
+
+# ---------------------------------------------------------------------------
+# Plan integration
+# ---------------------------------------------------------------------------
+
+def _plan_olmo(tune, cache, params=None, m=None):
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    cfg = dataclasses.replace(get_smoke("olmo-1b"), sparse_serving=True)
+    m = m or build_model(cfg)
+    params = params or m.init(jax.random.key(0))
+    plan = engine_plan.plan_model(cfg, params, sparsity=0.5, impl="pallas",
+                                  tune=tune, tune_cache=cache)
+    return cfg, m, params, plan
+
+
+def test_plan_determinism_with_cached_tuning(tmp_path):
+    """Given the same warm cache, two ``tune="cached"`` plan builds are
+    byte-identical (specs equal, leaves equal to the byte) — tuned plans
+    stay safe to cache/ship exactly like static ones."""
+    cache = str(tmp_path / "tune.json")
+    _, m, params, warm = _plan_olmo("sweep", cache)
+    assert set(warm.tuned_mix()) <= {"swept", "cached"}
+    _, _, _, p1 = _plan_olmo("cached", cache, params=params, m=m)
+    _, _, _, p2 = _plan_olmo("cached", cache, params=params, m=m)
+    assert p1.meta == p2.meta
+    assert p1.tuned_mix() == {"cached": len(p1.layers)}
+    for nm in p1.layers:
+        assert p1.layers[nm].spec == p2.layers[nm].spec
+    for l1, l2 in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        a1, a2 = np.asarray(l1), np.asarray(l2)
+        assert a1.dtype == a2.dtype and a1.tobytes() == a2.tobytes()
+
+
+def test_tuned_plan_parity_and_engine_stats(tmp_path):
+    """A tuned plan still matches the masked-dense reference, and the
+    ``tuned_blocks`` engine stat makes the tuned choices observable on the
+    real serving trace."""
+    cache = str(tmp_path / "tune.json")
+    cfg, m, params, plan = _plan_olmo("sweep", cache)
+    sparse_params = {**params, "sparse_plan": plan}
+    ref_params = engine_plan.masked_dense_params(params, plan)
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                cfg.vocab_size)
+    engine_execute.reset_stats()
+    ls, _ = jax.jit(m.prefill)(sparse_params, {"tokens": tokens})
+    stats = engine_execute.stats()
+    assert stats.get("balanced_spmm", 0) > 0
+    assert stats.get("tuned_blocks", 0) == stats["balanced_spmm"]
+    lr, _ = jax.jit(m.prefill)(ref_params, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(ls, np.float32),
+                               np.asarray(lr, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    # deltas recorded in meta are well-formed and name planned layers
+    for nm, tuned, static in plan.tune_deltas():
+        assert nm in plan.layers
+        assert len(tuned) == 3 and len(static) == 3
+
+
+def test_build_layer_plan_tune_knob(tmp_path):
+    """The single-layer builder honors the knob too (smallcnn/fc path)."""
+    from repro.core.pruning import balanced_prune_rows
+    cache = str(tmp_path / "tune.json")
+    w = jax.random.normal(jax.random.key(0), (48, 96))
+    _, mask = balanced_prune_rows(w, 0.5)
+    lp = engine_plan.build_layer_plan("fc", w, mask=mask, m_hint=64,
+                                      impl="pallas", tune="sweep",
+                                      tune_cache=cache)
+    assert lp.spec.tuned == "swept"
+    lp2 = engine_plan.build_layer_plan("fc", w, mask=mask, m_hint=64,
+                                       impl="pallas", tune="cached",
+                                       tune_cache=cache)
+    assert lp2.spec.tuned == "cached"
+    assert lp2.spec.blocks == lp.spec.blocks
+    # tune=off keeps the static model and the historical spec default
+    lp3 = engine_plan.build_layer_plan("fc", w, mask=mask, m_hint=64,
+                                       impl="pallas")
+    assert lp3.spec.tuned == "static"

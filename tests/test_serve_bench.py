@@ -1,0 +1,45 @@
+"""Register benchmarks/serve_bench.py --smoke as a slow-marked pytest: the
+end-to-end serving regression gate (sparse plan vs masked dense, prefill +
+decode tokens/s across a dense transformer, an MoE, and a recurrent
+family) alongside the kernel_bench gate."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_BENCH = (pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+          / "serve_bench.py")
+
+
+def _load_serve_bench():
+    spec = importlib.util.spec_from_file_location("serve_bench", _BENCH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.slow
+def test_serve_bench_smoke_gate(tmp_path):
+    """Smoke bench must pass its gate (rc 0: every arch benched, parity
+    held, positive throughput in both phases for both parameterizations)
+    and write a BENCH_serve.json-shaped report covering >= 3 families."""
+    sb = _load_serve_bench()
+    out = tmp_path / "bench_serve.json"
+    rc = sb.main(["--smoke", "--out", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["meta"]["mode"] == "smoke"
+    assert report["meta"]["failures"] == []
+    archs = report["archs"]
+    assert len(archs) >= 3
+    families = {cell["family"] for cell in archs.values()}
+    # the acceptance floor: transformer + MoE + one recurrent family
+    assert {"dense", "moe"} <= families
+    assert families & {"ssm", "hybrid"}
+    for arch, cell in archs.items():
+        for mode in ("masked_dense", "sparse_plan"):
+            for phase in ("prefill", "decode"):
+                assert cell[mode][f"{phase}_tokens_per_s"] > 0, (arch, mode)
+        assert cell["engine_stats"].get("balanced_spmm", 0) > 0, arch
+        assert cell["plan"]["sparse_layers"] > 0, arch
