@@ -213,6 +213,14 @@ def main(argv=None):
     print(f"families covered: {sorted(fams)};  decode speedup geomean "
           f"(sparse vs masked-dense, this backend): {geo:.2f}x;  "
           f"gate: {'ok' if ok else 'FAIL'}")
+    if failures:
+        # a report with recorded failures must never exit 0 — a CI step
+        # that archives the JSON and trusts the exit code would otherwise
+        # green-light a run that silently dropped an arch
+        print(f"gate: {len(failures)} arch(es) failed:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
     return 0 if ok else 1
 
 

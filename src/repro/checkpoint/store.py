@@ -86,17 +86,53 @@ def _gc(root: Path, keep: int):
         shutil.rmtree(d)
 
 
-def latest_step(root: str | Path) -> int | None:
+def complete_steps(root: str | Path) -> list[int]:
+    """Steps with a committed (renamed, manifest-bearing) directory,
+    ascending.  ``.tmp`` residue and manifest-less directories — a crash
+    mid-write or mid-rename — never appear here."""
     root = Path(root)
     if not root.exists():
-        return None
+        return []
     steps = []
     for d in root.iterdir():
         if (d.is_dir() and d.name.startswith("step_")
                 and not d.name.endswith(".tmp")
                 and (d / "manifest.json").exists()):
             steps.append(int(d.name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(root: str | Path) -> int | None:
+    steps = complete_steps(root)
+    return steps[-1] if steps else None
+
+
+def verify_checkpoint(root: str | Path, step: int) -> list[str]:
+    """Check one step's shards against its CRC manifest without building a
+    tree.  Returns a list of problems (empty = healthy), each naming the
+    offending file or leaf — the diagnostic half of the fallback restore."""
+    root = Path(root)
+    d = root / f"step_{step:08d}"
+    if not d.is_dir():
+        return [f"{d.name}: directory missing"]
+    try:
+        with open(d / "manifest.json") as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{d.name}/manifest.json: unreadable ({e})"]
+    problems = []
+    for key, meta in manifest.get("leaves", {}).items():
+        fpath = d / meta["file"]
+        try:
+            arr = np.load(fpath)
+        except (OSError, ValueError, EOFError) as e:
+            problems.append(f"{d.name}/{meta['file']} (leaf {key}): "
+                            f"unreadable shard ({type(e).__name__}: {e})")
+            continue
+        if zlib.crc32(arr.tobytes()) != meta["crc32"]:
+            problems.append(f"{d.name}/{meta['file']} (leaf {key}): "
+                            "CRC mismatch")
+    return problems
 
 
 def restore_checkpoint(root: str | Path, step: int, tree_like, *,
@@ -151,9 +187,26 @@ class CheckpointManager:
         return False
 
     def restore_latest(self, tree_like, *, shardings=None):
-        step = latest_step(self.root)
-        if step is None:
-            return None, None, {}
-        tree, extra = restore_checkpoint(self.root, step, tree_like,
-                                         shardings=shardings)
-        return step, tree, extra
+        """Restore the newest *restorable* step: walk complete steps newest
+        to oldest, skipping any that fail (truncated shard, CRC mismatch,
+        missing leaf — a hand-damaged or torn checkpoint) with a warning,
+        so one bad step costs at most ``every`` steps of progress rather
+        than the job."""
+        steps = complete_steps(self.root)
+        last_err = None
+        for step in reversed(steps):
+            try:
+                tree, extra = restore_checkpoint(self.root, step, tree_like,
+                                                 shardings=shardings)
+                return step, tree, extra
+            except (OSError, ValueError, KeyError, EOFError) as e:
+                last_err = e
+                print(f"checkpoint: step {step} unrestorable "
+                      f"({type(e).__name__}: {e}); falling back to an "
+                      "older step")
+        if steps and last_err is not None:
+            raise IOError(
+                f"no restorable checkpoint under {self.root}: all "
+                f"{len(steps)} complete step(s) failed; last error: "
+                f"{last_err}") from last_err
+        return None, None, {}

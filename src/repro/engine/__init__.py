@@ -8,18 +8,21 @@ split (DESIGN.md §8).
 - execute: dispatch a `LayerPlan` at a call site (projection / conv /
            per-expert fc), with trace-time stats so serving can prove the
            sparse path ran.
+- guard:   guarded execution (§11) — structural plan validation, the
+           pallas -> xla -> xla_gather -> dense degradation ladder, and
+           NaN bisection + quarantine for the serving path.
 
 Coverage spans every servable family (§9): `plan_model` dispatches to the
 transformer (incl. MoE expert tensors), RWKV6 and Zamba2 planners, and
 `plan_specs`/`shard_plan` give encoded plans real shardings.
 """
-from . import execute, plan
+from . import execute, guard, plan
 from .plan import (LayerPlan, ModelPlan, PlanSpec, build_layer_plan,
                    masked_dense_params, plan_from_balanced, plan_model,
                    plan_rwkv6, plan_smallcnn, plan_specs, plan_transformer,
                    plan_zamba2, shard_plan)
 
-__all__ = ["plan", "execute", "LayerPlan", "ModelPlan", "PlanSpec",
+__all__ = ["plan", "execute", "guard", "LayerPlan", "ModelPlan", "PlanSpec",
            "build_layer_plan", "plan_from_balanced", "plan_smallcnn",
            "plan_transformer", "plan_rwkv6", "plan_zamba2", "plan_model",
            "plan_specs", "shard_plan", "masked_dense_params"]

@@ -17,18 +17,28 @@ zeroed weights.
 from __future__ import annotations
 
 import collections
+import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from ..core.pruning import BalancedSparse
 from ..kernels import ops as kernel_ops
 from ..kernels.sparse_conv import sparse_conv2d as _sparse_conv2d
+from ..kernels.tile_format import TiledBalanced, tiled_to_flat
 from .plan import LayerPlan, ModelPlan
 
 Array = jax.Array
 
 # trace-time dispatch counters (see module docstring)
 STATS: "collections.Counter[str]" = collections.Counter()
+
+# The impl-degradation ladder (most specialized first): when a layer's
+# preferred impl fails to trace/compile/lower, `engine.guard.harden_plan`
+# steps it down one rung at a time.  Dense is the floor — a plain masked
+# matmul that cannot fail for kernel reasons.
+IMPL_LADDER = ("pallas", "xla", "xla_gather", "dense")
 
 
 def reset_stats() -> None:
@@ -43,13 +53,81 @@ def _count_dispatch(spec, *extra: str) -> None:
     """Record one balanced-sparse dispatch: the kernel family, the impl,
     and — when the plan's `BlockChoice` came from the measured autotuner
     rather than the static VMEM model — a ``tuned_blocks`` tick, so serve
-    (and tests) can observe that tuned choices reached the execute path."""
+    (and tests) can observe that tuned choices reached the execute path.
+    Layers the guard ladder demoted additionally tick
+    ``degraded_dispatch`` so degraded serving is observable in STATS."""
     STATS["balanced_spmm"] += 1
     STATS[f"impl_{spec.impl}"] += 1
     if spec.tuned != "static":
         STATS["tuned_blocks"] += 1
+    if spec.degraded_from:
+        STATS["degraded_dispatch"] += 1
     for name in extra:
         STATS[name] += 1
+
+
+# ---------------------------------------------------------------------------
+# Impl-degradation ladder (the mechanics; policy lives in engine.guard)
+# ---------------------------------------------------------------------------
+
+def next_impl(impl: str) -> str | None:
+    """The next rung down `IMPL_LADDER` (None below dense)."""
+    i = IMPL_LADDER.index(impl)
+    return IMPL_LADDER[i + 1] if i + 1 < len(IMPL_LADDER) else None
+
+
+def _tiled_to_flat_stacked(w: TiledBalanced):
+    """`tiled_to_flat` over any leading stacked axes ([*lead, O, NB, KB]):
+    lead axes fold into the row axis (every row carries the same K under
+    the balance invariant), decode flat, restack."""
+    lead = w.values.shape[:-3]
+    flat = TiledBalanced(w.values.reshape(-1, *w.values.shape[-2:]),
+                         w.indices.reshape(-1, *w.indices.shape[-2:]),
+                         w.counts.reshape(-1, w.counts.shape[-1]),
+                         n_in=w.n_in, bn=w.bn)
+    vals, idx = tiled_to_flat(flat)
+    k = vals.shape[-1]
+    o = w.values.shape[-3]
+    return (vals.reshape(*lead, o, k), idx.reshape(*lead, o, k))
+
+
+def demote_layer(lp: LayerPlan, *, to_impl: str | None = None,
+                 ref_dense: Array | None = None) -> LayerPlan:
+    """Re-target one LayerPlan at a lower ladder rung, re-encoding the
+    weights to that impl's native format.
+
+    pallas -> xla/xla_gather decodes the tile-local encoding back to the
+    flat balanced format; any impl -> dense densifies (or substitutes
+    ``ref_dense``, the quarantine path: a known-good [*lead, O, N] masked
+    weight replaces the possibly-poisoned encoding).  The original impl is
+    recorded in ``spec.degraded_from`` so the degradation stays visible in
+    plan summaries and STATS.
+    """
+    spec = lp.spec
+    to_impl = to_impl or next_impl(spec.impl)
+    if to_impl is None:
+        raise ValueError(f"{spec.name}: no rung below impl {spec.impl!r}")
+    if to_impl == spec.impl and ref_dense is None:
+        return lp
+    origin = spec.degraded_from or spec.impl
+    if to_impl == "dense":
+        weights = ref_dense if ref_dense is not None else lp.dense_weights()
+        if spec.kind == "conv" and weights.ndim == 2:
+            # apply_conv's dense path convolves the 4-D layout
+            ci = spec.n_in // (spec.hk * spec.wk)
+            weights = weights.reshape(spec.n_out, ci, spec.hk, spec.wk)
+        new_spec = dataclasses.replace(spec, impl="dense", k=spec.n_in,
+                                       blocks=None, block_k=0,
+                                       degraded_from=origin)
+        return LayerPlan(spec=new_spec, weights=weights)
+    if isinstance(lp.weights, TiledBalanced):
+        vals, idx = _tiled_to_flat_stacked(lp.weights)
+        weights: Any = BalancedSparse(vals, idx, spec.n_in)
+    else:
+        weights = lp.weights             # xla <-> xla_gather share a format
+    return LayerPlan(spec=dataclasses.replace(spec, impl=to_impl,
+                                              degraded_from=origin),
+                     weights=weights)
 
 
 def apply_fc(x: Array, lp: LayerPlan) -> Array:
@@ -161,4 +239,5 @@ def apply_named(x: Array, plan: ModelPlan, name: str) -> Array:
 
 
 __all__ = ["apply_fc", "apply_expert_fc", "apply_conv", "apply_layer",
-           "apply_named", "stats", "reset_stats", "STATS"]
+           "apply_named", "stats", "reset_stats", "STATS", "IMPL_LADDER",
+           "next_impl", "demote_layer"]

@@ -132,6 +132,10 @@ class PlanSpec:
                                     # layer's resolve key (None when
                                     # ``blocks`` is; equals ``blocks``
                                     # when tuned == "static")
+    degraded_from: str = ""         # the impl the planner originally chose,
+                                    # set when the guard ladder demoted or
+                                    # quarantined this layer ("" = never
+                                    # degraded; see engine.guard)
 
     @property
     def is_sparse(self) -> bool:
@@ -242,6 +246,22 @@ class ModelPlan:
         recorded at build time (`meta` key ``tune_deltas``)."""
         return dict(self.meta).get("tune_deltas", ())
 
+    def degraded_mix(self) -> Dict[str, int]:
+        """Per-layer ``"<original>-><current>"`` counts for layers the
+        guard ladder demoted or quarantined (empty = nothing degraded)."""
+        mix: Dict[str, int] = {}
+        for lp in self.layers.values():
+            s = lp.spec
+            if s.degraded_from:
+                key = f"{s.degraded_from}->{s.impl}"
+                mix[key] = mix.get(key, 0) + 1
+        return mix
+
+    def quarantined(self) -> Tuple:
+        """Layer names the runtime NaN guard flipped to dense (`meta` key
+        ``quarantined``, stamped by `engine.guard.quarantine_layers`)."""
+        return dict(self.meta).get("quarantined", ())
+
     @property
     def sparse_layer_count(self) -> int:
         return sum(1 for lp in self.layers.values() if lp.spec.is_sparse)
@@ -256,6 +276,10 @@ class ModelPlan:
                          f"{s.w_sparsity:6.2f} {s.d_mem_bits / 1e3:9.0f}")
         lines.append(f"mode mix {self.mode_mix()}  impl mix {self.impl_mix()}"
                      f"  blocks {self.tuned_mix()}")
+        degraded = self.degraded_mix()
+        if degraded:
+            lines.append(f"degraded {degraded}  quarantined "
+                         f"{list(self.quarantined())}")
         return "\n".join(lines)
 
 

@@ -33,6 +33,7 @@ key, never consulted on TPU (the backend is part of the key).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import json
 import os
@@ -40,6 +41,11 @@ import pathlib
 import tempfile
 import time
 from typing import NamedTuple
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX fallback
+    fcntl = None
 
 import jax
 import jax.numpy as jnp
@@ -127,6 +133,43 @@ def save_cache(entries: dict, path: str | os.PathLike | None = None) -> str:
             os.unlink(tmp)
     _READ_MEMO.pop(str(path), None)
     return str(path)
+
+
+@contextlib.contextmanager
+def _cache_lock(path: pathlib.Path):
+    """Advisory exclusive lock on ``<path>.lock`` (flock).  Serializes the
+    read-merge-write cycle in `update_cache` across processes; degrades to
+    unlocked on platforms without fcntl (the atomic rename still prevents
+    torn files, only last-writer-wins entry loss)."""
+    if fcntl is None:  # pragma: no cover
+        yield
+        return
+    path.parent.mkdir(parents=True, exist_ok=True)
+    lock = path.with_suffix(path.suffix + ".lock")
+    with open(lock, "w") as f:
+        fcntl.flock(f, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(f, fcntl.LOCK_UN)
+
+
+def update_cache(updates: dict,
+                 path: str | os.PathLike | None = None) -> dict:
+    """Merge ``updates`` into the on-disk cache under an exclusive lock.
+
+    The unsafe pattern — load, mutate in memory, `save_cache` — lets two
+    concurrent sweeps drop each other's entries (both read the same base,
+    last rename wins).  This re-reads the file *inside* the lock, merges,
+    and writes atomically, so concurrent writers union their entries.
+    Returns the merged entry dict.
+    """
+    path = pathlib.Path(path or default_cache_path())
+    with _cache_lock(path):
+        entries = load_cache(path)
+        entries.update(updates)
+        save_cache(entries, path)
+    return entries
 
 
 # ---------------------------------------------------------------------------
@@ -230,21 +273,39 @@ def sweep_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
     dtype = _ITEMSIZE_DTYPE.get(itemsize, jnp.float32)
     x, vals, idx = _bench_problem(m, o, n, k, dtype)
     timed = []
+    quarantined = []
     for cand in candidate_blocks(m, o, n, k, itemsize=itemsize,
                                  vmem_budget=vmem_budget):
-        kb = max_block_count(idx, n, cand.bn)
-        tb = encode_tiled(vals, idx, n, bn=cand.bn, kb=kb)
-        fn = jax.jit(functools.partial(ops.tiled_spmm, tb=tb,
-                                       block_m=cand.bm, block_o=cand.bo))
-        t = bench_time(fn, x, iters=iters, warmup=warmup)
+        try:
+            kb = max_block_count(idx, n, cand.bn)
+            tb = encode_tiled(vals, idx, n, bn=cand.bn, kb=kb)
+            fn = jax.jit(functools.partial(ops.tiled_spmm, tb=tb,
+                                           block_m=cand.bm, block_o=cand.bo))
+            t = bench_time(fn, x, iters=iters, warmup=warmup)
+        except Exception as e:  # noqa: BLE001 — one bad candidate must not
+            # abort the sweep: quarantine it (recorded, never the winner)
+            quarantined.append(dict(_choice_fields(cand),
+                                    error=f"{type(e).__name__}: {e}"))
+            continue
         timed.append((t, cand))
-    static_t = next(t for t, c in timed
-                    if (c.bm, c.bo, c.bn) == (static.bm, static.bo, static.bn))
+    if not timed:
+        # every candidate failed — fall back to the untimed static model
+        # and do NOT mark the record a sweep (it must not be cached as one)
+        record = dict(base, source="static",
+                      note="all sweep candidates failed",
+                      **_choice_fields(static), time_s=None,
+                      static_time_s=None, candidates=[],
+                      quarantined=quarantined)
+        return static, record
+    static_t = next((t for t, c in timed
+                     if (c.bm, c.bo, c.bn) == (static.bm, static.bo,
+                                               static.bn)), None)
     best_t, best = min(timed, key=lambda tc: tc[0])
     record = dict(base, source="sweep", **_choice_fields(best),
                   time_s=best_t, static_time_s=static_t,
                   candidates=[dict(_choice_fields(c), time_s=t)
-                              for t, c in timed])
+                              for t, c in timed],
+                  quarantined=quarantined)
     return best, record
 
 
@@ -320,10 +381,8 @@ def resolve_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
                                 iters=iters, warmup=warmup,
                                 vmem_budget=vmem_budget)
     if record.get("source") == "sweep":
-        # re-read before write: another process may have added keys since
-        entries = load_cache(path)
-        entries[key] = record
-        save_cache(entries, path)
+        # locked read-merge-write: concurrent sweeps union their entries
+        update_cache({key: record}, path)
         return Resolved(best, "swept", static)
     return Resolved(static, "static", static)
 
@@ -353,7 +412,8 @@ def main(argv=None):  # pragma: no cover - thin CLI
 
 __all__ = ["CACHE_VERSION", "TUNABLE_IMPLS", "Resolved", "bench_time",
            "cache_key", "candidate_blocks", "default_cache_path",
-           "load_cache", "resolve_blocks", "save_cache", "sweep_blocks"]
+           "load_cache", "resolve_blocks", "save_cache", "sweep_blocks",
+           "update_cache"]
 
 
 if __name__ == "__main__":  # pragma: no cover

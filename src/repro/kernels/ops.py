@@ -41,6 +41,24 @@ Array = jax.Array
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
+class InjectedKernelFault(RuntimeError):
+    """Raised by an armed fault-injection site (`repro.testing.faults`)."""
+
+
+# Kernel-dispatch fault-injection sites: impl name -> predicate(ctx) -> bool.
+# Armed only by `repro.testing.faults.force_impl_failure`; empty (the
+# default) costs one falsy dict check per *trace*, nothing at runtime.
+_FORCED_FAULTS: dict = {}
+
+
+def _fault_trip(site: str, **ctx) -> None:
+    if _FORCED_FAULTS:
+        pred = _FORCED_FAULTS.get(site)
+        if pred is not None and pred(ctx):
+            raise InjectedKernelFault(
+                f"injected kernel fault at impl {site!r} ({ctx})")
+
+
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
@@ -160,6 +178,25 @@ def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
                        vmem_bytes=footprint(bm, bo, bn))
 
 
+def halve_blocks(c: BlockChoice, *, kb: int | None = None,
+                 itemsize: int = 4) -> BlockChoice | None:
+    """One VMEM-pressure retry step for the degradation ladder: halve
+    bm/bo toward the 8-floor.  ``bn`` is untouched — the tile-local format
+    bakes the column-block width into the encoding, so changing it would
+    force a re-encode mid-recovery.  Returns None when already at the
+    floor (nothing left to shrink; the ladder steps down an impl instead).
+    ``kb`` (the encoding's real per-block capacity) refreshes the modeled
+    footprint; without it the pre-halving model value is carried over
+    (it is bookkeeping, not a dispatch parameter)."""
+    if c.bm <= 8 and c.bo <= 8:
+        return None
+    bm = max(8, c.bm // 2)
+    bo = max(8, c.bo // 2)
+    vmem = _tiled_footprint(bm, bo, c.bn, kb, itemsize) if kb \
+        else c.vmem_bytes
+    return BlockChoice(bm=bm, bo=bo, bn=c.bn, vmem_bytes=vmem)
+
+
 # ---------------------------------------------------------------------------
 # Tile-format encoding cache (keyed per weight id)
 # ---------------------------------------------------------------------------
@@ -240,6 +277,7 @@ def _balanced_spmm_xla(x: Array, values: Array, indices: Array,
                        n_in: int) -> Array:
     """Densify (scatter) + rank-2 dot — MXU-eligible, XLA fuses the scatter
     into the weight producer.  The production fallback."""
+    _fault_trip("xla")
     w = ref.balanced_dense(values, indices, n_in)
     return jnp.dot(x, w.T,
                    preferred_element_type=jnp.float32).astype(x.dtype)
@@ -248,6 +286,7 @@ def _balanced_spmm_xla(x: Array, values: Array, indices: Array,
 def _pad_and_run_tiled(x: Array, tb: TiledBalanced, bm: int,
                        bo: int) -> Array:
     """Pad (M, O, N) to tile multiples, run the kernel, slice back."""
+    _fault_trip("pallas", bm=bm, bo=bo, bn=tb.bn)
     m = x.shape[0]
     o = tb.values.shape[0]
     mp, op_ = _round_up(m, bm), _round_up(o, bo)
@@ -276,6 +315,7 @@ def _balanced_spmm(x, values, indices, n_in, impl, blocks):
     if impl == "pallas":
         return _balanced_spmm_pallas_tiled(x, values, indices, n_in, blocks)
     if impl == "xla_gather":
+        _fault_trip("xla_gather")
         return ref.balanced_spmm_gather(x, values, indices)
     return _balanced_spmm_xla(x, values, indices, n_in)
 
@@ -446,4 +486,5 @@ def encode_bitmap(w: Array, *, bn: int = 128, k: int | None = None):
 
 
 __all__ = ["balanced_spmm", "tiled_spmm", "tiled_spmm_batched",
-           "bitmap_spmm", "encode_bitmap", "choose_blocks", "BlockChoice"]
+           "bitmap_spmm", "encode_bitmap", "choose_blocks", "BlockChoice",
+           "halve_blocks", "InjectedKernelFault"]

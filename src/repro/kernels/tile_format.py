@@ -166,6 +166,37 @@ def tiled_to_dense(tb: TiledBalanced) -> Array:
     return dense[:, :tb.n_in]
 
 
+def tiled_to_flat(tb: TiledBalanced):
+    """`TiledBalanced` -> flat balanced ``(values[O, K], indices[O, K])``
+    with global ascending column indices — the inverse of `encode_tiled`
+    for well-formed encodings (every row holds the same total count K).
+
+    Host-side (requires concrete indices/counts): this is the degradation
+    ladder's pallas -> xla demotion path, not a hot-path op.  Raises
+    ``ValueError`` when the encoding violates the balance invariant (rows
+    with unequal totals have no flat [O, K] representation).
+    """
+    idx = np.asarray(tb.indices)
+    cnt = np.asarray(tb.counts)
+    o, nb, kb = idx.shape
+    totals = cnt.sum(axis=1)
+    if o and not (totals == totals[0]).all():
+        raise ValueError("unbalanced encoding: per-row totals "
+                         f"range {totals.min()}..{totals.max()} — no flat "
+                         "[O, K] representation")
+    k = int(totals[0]) if o else 0
+    valid = np.arange(kb)[None, None, :] < cnt[:, :, None]     # [O, NB, KB]
+    gcols = np.arange(nb)[None, :, None] * tb.bn + idx         # global cols
+    # valid slots first, preserving (block, slot) order — which is ascending
+    # column order for encode_tiled output
+    order = np.argsort(~valid.reshape(o, -1), axis=1, kind="stable")[:, :k]
+    flat_idx = np.take_along_axis(gcols.reshape(o, -1), order,
+                                  axis=1).astype(np.int32)
+    flat_vals = jnp.take_along_axis(tb.values.reshape(o, -1),
+                                    jnp.asarray(order), axis=1)
+    return flat_vals, jnp.asarray(flat_idx)
+
+
 def block_imbalance(tb: TiledBalanced) -> float:
     """KB padding slack: capacity / mean block count (1.0 == no waste).
 

@@ -41,7 +41,20 @@ from ..engine import plan as engine_plan
 
 def greedy_generate(bundle, params, prompt, steps: int, max_len: int, *,
                     prefill_fn=None, decode_fn=None):
-    """Greedy decode; pass prejitted fns to keep compile out of timed runs."""
+    """Greedy decode; pass prejitted fns to keep compile out of timed runs.
+
+    ``max_len`` must cover the prompt plus every generated position with a
+    slot to spare: the decode cache writes at position ``cache_len`` via a
+    scatter, and an out-of-range scatter index *clamps silently* under
+    XLA's default semantics — tokens past the cache end would quietly
+    overwrite the last slot instead of erroring.  Guard it here, loudly.
+    """
+    if prompt.shape[1] + steps + 1 > max_len:
+        raise ValueError(
+            f"KV cache overrun: prompt_len={prompt.shape[1]} + "
+            f"steps={steps} + 1 > max_len={max_len} — decode would scatter "
+            "past the cache end (silently clamped, corrupting the last "
+            "slot); raise max_len or shorten the generation")
     prefill_fn = prefill_fn or jax.jit(bundle.prefill)
     decode_fn = decode_fn or jax.jit(bundle.decode_step)
     b = prompt.shape[0]
@@ -72,6 +85,78 @@ def _parity_check(prefill_fn, sparse_params, ref_params, prompt, *,
     return diff
 
 
+def guarded_generate(bundle, plan, params, prompt, steps: int, max_len: int,
+                     *, prefill_fn, decode_fn, ref_blocks=None):
+    """One guarded serving pass: check logits finiteness after prefill and
+    after every decode step; on a trip, bisect the plan against the dense
+    reference (`engine.guard.locate_poisoned`), quarantine the culprit
+    layer(s) to dense, and restart the pass under the repaired plan.
+
+    Returns ``(tokens, plan, events)`` — the possibly-quarantined plan plus
+    a list of guard-report events.  Untimed by design: each finiteness
+    check is a host sync, so this runs once before the timed loops (the
+    ``--guard`` serving pass), never inside them.
+    """
+    from ..engine import guard as engine_guard
+
+    def eval_finite(cand_plan) -> bool:
+        # the oracle must cover prefill AND a decode step: flash prefill
+        # attention masks non-finite scores (its fully-masked-row guard),
+        # so a NaN q/k projection only surfaces through decode_attention's
+        # plain softmax
+        p = {**params, "sparse_plan": cand_plan}
+        lg, _ = prefill_fn(p, {"tokens": prompt})
+        if not bool(jnp.isfinite(lg).all()):
+            return False
+        cache = bundle.init_cache(prompt.shape[0], max_len)
+        toks = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        clen = jnp.full((prompt.shape[0],), prompt.shape[1], jnp.int32)
+        lg2, _ = decode_fn(p, {"tokens": toks, "cache_len": clen}, cache)
+        return bool(jnp.isfinite(lg2).all())
+
+    events = []
+    for attempt in range(4):  # each repair round quarantines >= 1 layer
+        p = {**params, "sparse_plan": plan}
+        tripped_at = None
+        b = prompt.shape[0]
+        cache = bundle.init_cache(b, max_len)
+        logits, _ = prefill_fn(p, {"tokens": prompt})
+        if not bool(jnp.isfinite(logits).all()):
+            tripped_at = "prefill"
+        else:
+            toks = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            out = [toks]
+            clen = jnp.full((b,), prompt.shape[1], jnp.int32)
+            for step in range(steps):
+                logits, cache = decode_fn(p, {"tokens": toks,
+                                              "cache_len": clen}, cache)
+                if not bool(jnp.isfinite(logits).all()):
+                    tripped_at = f"decode_step_{step}"
+                    break
+                toks = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+                clen = clen + 1
+                out.append(toks)
+            if tripped_at is None:
+                return jnp.concatenate(out, axis=1), plan, events
+        poisoned, attributable = engine_guard.locate_poisoned(
+            plan, eval_finite, ref_blocks=ref_blocks)
+        events.append({"event": "nan_trip", "at": tripped_at,
+                       "poisoned_layers": list(poisoned),
+                       "attributable": attributable})
+        if not attributable or not poisoned:
+            raise engine_guard.GuardError(
+                f"non-finite logits at {tripped_at} not attributable to "
+                f"any planned sparse layer (bisection blamed "
+                f"{list(poisoned)}) — the poison is outside the plan "
+                "(component: model params / dense path)")
+        print(f"[serve/guard] non-finite logits at {tripped_at}; bisection "
+              f"blames {list(poisoned)}; quarantined to dense, restarting "
+              "the guarded pass")
+        plan = engine_guard.quarantine_layers(plan, poisoned, ref_blocks)
+    raise engine_guard.GuardError(
+        "guarded serving did not stabilize after 4 quarantine rounds")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default="olmo-1b")
@@ -96,7 +181,24 @@ def main(argv=None):
                     help="autotune cache path (default "
                          "~/.cache/repro/autotune.json or "
                          "$REPRO_AUTOTUNE_CACHE)")
+    ap.add_argument("--guard", action="store_true",
+                    help="guarded execution (engine.guard): validate the "
+                         "plan, probe-harden every layer down the impl "
+                         "ladder, and run one untimed serving pass with "
+                         "per-step logits finiteness checks — a NaN trip "
+                         "bisects to the poisoned layer and quarantines it "
+                         "to dense.  Off the timed hot path either way")
+    ap.add_argument("--inject-nan", action="store_true",
+                    help="fault injection: poison one planned layer's "
+                         "values with NaN after the parity reference is "
+                         "built (chaos-testing --guard; refused without it)")
+    ap.add_argument("--report", default=None,
+                    help="write the serve report (incl. guard/degradation "
+                         "events) to this JSON file")
     args = ap.parse_args(argv)
+    if args.inject_nan and not args.guard:
+        ap.error("--inject-nan poisons the serving path by design; it is "
+                 "only meaningful (and only safe) under --guard")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(cfg, sparse_serving=True)
@@ -133,6 +235,22 @@ def main(argv=None):
     assert plan.sparse_layer_count > 0, \
         "plan produced no sparse-kernel layers — sparsity below §VI-F " \
         "thresholds?"
+
+    # ---- guarded execution: validate + harden before anything runs -------
+    guard_report = None
+    if args.guard:
+        from ..engine import guard as engine_guard
+        report = engine_guard.validate_plan(plan, strict=True)
+        plan, degradations = engine_guard.harden_plan(plan)
+        guard_report = {"validated_layers": len(report.layers),
+                        "degradations": [dataclasses.asdict(d)
+                                         for d in degradations],
+                        "events": []}
+        print(f"[serve/guard] {report.summary()}")
+        for d in degradations:
+            print(f"[serve/guard] ladder: {d.layer} {d.from_impl} -> "
+                  f"{d.to_impl} ({d.action}: {d.reason})")
+
     sparse_params = {**params, "sparse_plan": plan}
     ref_params = engine_plan.masked_dense_params(params, plan)
 
@@ -142,6 +260,26 @@ def main(argv=None):
     prefill_fn = jax.jit(bundle.prefill)
     decode_fn = jax.jit(bundle.decode_step)
 
+    # ---- the guarded serving pass (untimed; NaN bisection + quarantine) --
+    if args.guard:
+        if args.inject_nan:
+            from ..testing import faults
+            plan, poisoned_name = faults.inject_nan_output(plan)
+            print(f"[serve/guard] fault injection: poisoned layer "
+                  f"{poisoned_name!r} values with NaN")
+            guard_report["injected"] = poisoned_name
+        _, plan, events = guarded_generate(
+            bundle, plan, params, prompt, 2, max_len,
+            prefill_fn=prefill_fn, decode_fn=decode_fn,
+            ref_blocks=ref_params["blocks"])
+        guard_report["events"] = events
+        guard_report["quarantined"] = list(plan.quarantined())
+        sparse_params = {**params, "sparse_plan": plan}
+        if plan.degraded_mix() or plan.quarantined():
+            print(f"[serve/guard] serving a degraded mix: "
+                  f"{plan.degraded_mix()}; quarantined "
+                  f"{list(plan.quarantined())}")
+
     # ---- correctness: sparse plan == masked dense, and the balanced
     # kernels are actually on the traced token path ------------------------
     tol = 1e-4 if jnp.dtype(cfg.compute_dtype) == jnp.float32 else 2e-2
@@ -149,12 +287,26 @@ def main(argv=None):
     diff = _parity_check(prefill_fn, sparse_params, ref_params, prompt,
                          tol=tol)
     stats = engine_execute.stats()
-    assert stats.get("balanced_spmm", 0) > 0, \
-        f"balanced_spmm never dispatched — sparse path is a no-op ({stats})"
-    if any(lp.spec.experts for lp in plan.layers.values()):
+    if args.guard and not stats.get("balanced_spmm"):
+        # the guarded pass already compiled this params structure, so the
+        # jitted parity calls hit the executable cache without re-tracing
+        # and the trace-time counters stayed at zero — re-count with an
+        # abstract trace (no compile, no execution; the fresh lambda defeats
+        # the tracing cache, which is keyed on function identity)
+        engine_execute.reset_stats()
+        jax.eval_shape(lambda p, b: bundle.prefill(p, b), sparse_params,
+                       {"tokens": prompt})
+        stats = engine_execute.stats()
+    if plan.sparse_layer_count > 0:
+        assert stats.get("balanced_spmm", 0) > 0, \
+            f"balanced_spmm never dispatched — sparse path is a no-op " \
+            f"({stats})"
+    if any(lp.spec.experts and lp.spec.is_sparse
+           for lp in plan.layers.values()):
         # planned expert tensors must run the per-expert balanced kernels,
         # not a dense einsum on densified experts (--attn-only plans carry
-        # no expert layers and are exempt)
+        # no expert layers, and guard-quarantined expert layers are
+        # legitimately dense)
         assert stats.get("expert_balanced_spmm", 0) > 0, \
             f"MoE expert layers never hit the per-expert path ({stats})"
     print(f"[serve] parity sparse vs masked-dense: max |dlogit| = {diff:.2e}"
@@ -196,11 +348,21 @@ def main(argv=None):
                  "deltas": [[nm, list(t), list(s)]
                             for nm, t, s in plan.tune_deltas()]},
     }
+    if guard_report is not None:
+        guard_report["degraded_mix"] = plan.degraded_mix()
+        results["guard"] = guard_report
     print(f"[serve] family={cfg.family} planned weight sparsity "
           f"{1 - total_nnz / max(total_numel, 1):.2f}, "
           f"bitmap compression {dense_bits / comp_bits:.2f}x;  "
           f"dataflow mode mix {plan.mode_mix()}  "
           f"impl mix {plan.impl_mix()}")
+    if args.report:
+        import json
+        import pathlib
+        out = pathlib.Path(args.report)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(results, indent=1, default=str) + "\n")
+        print(f"[serve] report -> {out}")
     return results
 
 

@@ -1,0 +1,4 @@
+"""Test-support utilities: the fault-injection harness (`faults`)."""
+from . import faults
+
+__all__ = ["faults"]

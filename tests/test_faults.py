@@ -1,0 +1,434 @@
+"""Chaos suite: every injector in `repro.testing.faults` drives the guard
+layer it was built for (`engine/guard.py`, the serve ``--guard`` path, the
+checkpoint fallback restore, the autotune quarantine) — detection,
+degradation, and recovery, never a crash."""
+import dataclasses
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pruning import balanced_prune_rows
+from repro.engine import execute as engine_execute
+from repro.engine import guard as engine_guard
+from repro.engine import plan as engine_plan
+from repro.kernels import autotune, ops
+from repro.testing import faults
+
+
+def _fc_plan(key=0, o=48, n=96, sparsity=0.6, **kw):
+    w = jax.random.normal(jax.random.key(key), (o, n))
+    _, mask = balanced_prune_rows(w, sparsity)
+    lp = engine_plan.build_layer_plan("fc", w, mask=mask, m_hint=32, **kw)
+    return w * mask, lp
+
+
+def _toy_plan(impls=("pallas", "xla")):
+    """Multi-layer ModelPlan + the masked-dense references in params
+    layout ([n_in, n_out]) that serve's ref_params would carry."""
+    layers, ref_blocks = {}, {}
+    for i, impl in enumerate(impls):
+        wm, lp = _fc_plan(key=i, impl=impl)
+        name = f"l{i}_{impl}"
+        layers[name] = lp
+        ref_blocks[name] = jnp.asarray(wm.T)
+    return engine_plan.ModelPlan(layers=layers, meta=()), ref_blocks
+
+
+# ---------------------------------------------------------------------------
+# validate_plan: structural invariants
+# ---------------------------------------------------------------------------
+
+def test_validate_clean_plan_passes_with_probe():
+    plan, _ = _toy_plan()
+    report = engine_guard.validate_plan(plan, strict=True, probe=True)
+    assert report.ok
+    assert len(report.layers) == 2
+    for lr in report.layers.values():
+        assert lr.probe_error is None
+        assert lr.probe_max_diff is not None and lr.probe_max_diff < 1e-4
+
+
+@pytest.mark.parametrize("kind,check", [
+    ("index_oob", "index_range"),
+    ("count_overflow", "count_capacity"),
+    ("nan", "finite"),
+    ("imbalance", "balance"),
+])
+def test_validate_names_corrupt_tiled_layer(kind, check):
+    plan, _ = _toy_plan()
+    bad, name = faults.corrupt_tile_encoding(plan, layer="l0_pallas",
+                                             kind=kind)
+    with pytest.raises(engine_guard.PlanValidationError) as ei:
+        engine_guard.validate_plan(bad, strict=True)
+    # the error names the layer and the broken invariant
+    assert name in str(ei.value) and check in str(ei.value)
+    # advisory mode reports instead of raising
+    report = engine_guard.validate_plan(bad, strict=False)
+    assert not report.ok
+    assert any(v.layer == name and v.check == check
+               for v in report.violations())
+    assert report.layers["l1_xla"].ok      # damage stays attributed
+
+
+@pytest.mark.parametrize("kind,check", [
+    ("index_oob", "index_range"), ("nan", "finite")])
+def test_validate_names_corrupt_flat_layer(kind, check):
+    plan, _ = _toy_plan()
+    bad, name = faults.corrupt_tile_encoding(plan, layer="l1_xla", kind=kind)
+    report = engine_guard.validate_plan(bad, strict=False)
+    assert any(v.layer == name and v.check == check
+               for v in report.violations())
+
+
+def test_validate_weights_type_mismatch():
+    plan, _ = _toy_plan()
+    lp_pal = plan.layers["l0_pallas"]
+    lp_xla = plan.layers["l1_xla"]
+    # pallas spec paired with flat-format weights: a miswired restore
+    crossed = engine_plan.LayerPlan(spec=lp_pal.spec, weights=lp_xla.weights)
+    bad = engine_plan.ModelPlan(layers={**dict(plan.layers),
+                                        "l0_pallas": crossed},
+                                meta=plan.meta)
+    report = engine_guard.validate_plan(bad, strict=False)
+    assert any(v.layer == "l0_pallas" and v.check == "weights_type"
+               for v in report.violations())
+
+
+# ---------------------------------------------------------------------------
+# The degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_forced_fault_trips_dispatch():
+    _, lp = _fc_plan(impl="xla")
+    x = jax.random.normal(jax.random.key(3), (4, 96))
+    with faults.force_impl_failure("xla"):
+        with pytest.raises(ops.InjectedKernelFault):
+            engine_execute.apply_layer(x, lp)
+    # disarmed on exit
+    engine_execute.apply_layer(x, lp)
+
+
+def test_demote_preserves_numerics_down_the_ladder():
+    wm, lp = _fc_plan(impl="pallas")
+    x = jax.random.normal(jax.random.key(3), (5, 96))
+    want = x @ wm.T
+    for impl in ("xla", "xla_gather", "dense"):
+        lp_d = engine_execute.demote_layer(lp, to_impl=impl)
+        assert lp_d.spec.impl == impl
+        assert lp_d.spec.degraded_from == "pallas"
+        np.testing.assert_allclose(
+            np.asarray(engine_execute.apply_layer(x, lp_d)),
+            np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_harden_demotes_failing_impl_and_records():
+    plan, _ = _toy_plan()
+    x = jax.random.normal(jax.random.key(4), (5, 96))
+    before = {nm: engine_execute.apply_layer(x, lp)
+              for nm, lp in plan.layers.items()}
+    with faults.force_impl_failure("pallas"):
+        hardened, events = engine_guard.harden_plan(plan)
+    assert hardened.layers["l0_pallas"].spec.impl == "xla"
+    assert hardened.layers["l1_xla"].spec.impl == "xla"     # untouched
+    assert hardened.degraded_mix() == {"pallas->xla": 1}
+    assert any(e.layer == "l0_pallas" and e.action == "demoted"
+               for e in events)
+    assert dict(hardened.meta).get("degraded")
+    # numerics survive the demotion
+    for nm, lp in hardened.layers.items():
+        np.testing.assert_allclose(
+            np.asarray(engine_execute.apply_layer(x, lp)),
+            np.asarray(before[nm]), rtol=1e-5, atol=1e-5)
+    # and degraded dispatches are observable in STATS (abstract trace)
+    engine_execute.reset_stats()
+    jax.eval_shape(lambda p, x: engine_execute.apply_named(x, p, "l0_pallas"),
+                   hardened, x)
+    assert engine_execute.stats().get("degraded_dispatch", 0) == 1
+
+
+def test_harden_walks_multiple_rungs():
+    plan, _ = _toy_plan(impls=("pallas",))
+    with faults.force_impl_failure("pallas", "xla"):
+        hardened, events = engine_guard.harden_plan(plan)
+    assert hardened.layers["l0_pallas"].spec.impl == "xla_gather"
+    assert [e.to_impl for e in events if e.action == "demoted"] == \
+        ["xla", "xla_gather"]
+    assert hardened.degraded_mix() == {"pallas->xla_gather": 1}
+
+
+def test_harden_vmem_trip_halves_blocks(monkeypatch):
+    plan, _ = _toy_plan(impls=("pallas",))
+    spec = plan.layers["l0_pallas"].spec
+    assert spec.blocks is not None
+    # a budget the plan's choice double-buffers past, but its halved
+    # version fits — the recovery must halve, not demote
+    halved = ops.halve_blocks(spec.blocks, kb=spec.block_k)
+    assert halved is not None and halved.vmem_bytes < spec.blocks.vmem_bytes
+    monkeypatch.setattr(ops, "_VMEM_BUDGET", 2 * spec.blocks.vmem_bytes - 1)
+    hardened, events = engine_guard.harden_plan(plan)
+    assert [e.action for e in events] == ["halved_blocks"]
+    hspec = hardened.layers["l0_pallas"].spec
+    assert hspec.impl == "pallas"                  # same rung, smaller tiles
+    assert (hspec.blocks.bm, hspec.blocks.bo) == (halved.bm, halved.bo)
+
+
+def test_harden_raises_when_dense_floor_fails():
+    plan, _ = _toy_plan(impls=("xla",))
+    poisoned, _ = faults.inject_nan_output(plan, layer="l0_xla")
+    with pytest.raises(engine_guard.GuardError, match="l0_xla"):
+        # NaN values poison every rung including dense: unrecoverable
+        engine_guard.harden_plan(poisoned)
+
+
+# ---------------------------------------------------------------------------
+# NaN bisection + quarantine
+# ---------------------------------------------------------------------------
+
+def _finite_oracle(x):
+    def eval_finite(cand):
+        return all(bool(jnp.isfinite(
+            engine_execute.apply_layer(x, lp)).all())
+            for lp in cand.layers.values())
+    return eval_finite
+
+
+def test_locate_poisoned_blames_the_right_layer():
+    plan, ref_blocks = _toy_plan(impls=("pallas", "xla", "xla"))
+    x = jax.random.normal(jax.random.key(5), (4, 96))
+    poisoned, name = faults.inject_nan_output(plan, layer="l1_xla")
+    culprits, attributable = engine_guard.locate_poisoned(
+        poisoned, _finite_oracle(x), ref_blocks=ref_blocks)
+    assert attributable and culprits == (name,)
+
+
+def test_quarantine_restores_parity_against_reference():
+    plan, ref_blocks = _toy_plan(impls=("pallas", "xla"))
+    x = jax.random.normal(jax.random.key(6), (4, 96))
+    clean = {nm: engine_execute.apply_layer(x, lp)
+             for nm, lp in plan.layers.items()}
+    poisoned, name = faults.inject_nan_output(plan, layer="l0_pallas")
+    fixed = engine_guard.quarantine_layers(poisoned, [name], ref_blocks)
+    assert fixed.layers[name].spec.impl == "dense"
+    assert fixed.quarantined() == (name,)
+    np.testing.assert_allclose(
+        np.asarray(engine_execute.apply_layer(x, fixed.layers[name])),
+        np.asarray(clean[name]), rtol=1e-5, atol=1e-5)
+
+
+def test_locate_poisoned_multiple_layers():
+    plan, ref_blocks = _toy_plan(impls=("xla", "xla", "xla"))
+    x = jax.random.normal(jax.random.key(7), (4, 96))
+    p1, n1 = faults.inject_nan_output(plan, layer="l0_xla")
+    p2, n2 = faults.inject_nan_output(p1, layer="l2_xla")
+    culprits, attributable = engine_guard.locate_poisoned(
+        p2, _finite_oracle(x), ref_blocks=ref_blocks)
+    assert attributable and sorted(culprits) == sorted([n1, n2])
+
+
+def test_locate_poisoned_unattributable():
+    plan, ref_blocks = _toy_plan(impls=("xla",))
+    poisoned, _ = faults.inject_nan_output(plan, layer="l0_xla")
+    # an oracle that never recovers (poison outside the planned layers)
+    culprits, attributable = engine_guard.locate_poisoned(
+        poisoned, lambda cand: False, ref_blocks=ref_blocks)
+    assert not attributable
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint recovery (store.py + the filesystem injectors)
+# ---------------------------------------------------------------------------
+
+def _tiny_tree(seed=0):
+    k = jax.random.key(seed)
+    return {"w": jax.random.normal(k, (8, 8)),
+            "b": jnp.arange(8, dtype=jnp.float32)}
+
+
+def test_restore_falls_back_on_truncated_shard(tmp_path, capsys):
+    from repro.checkpoint.store import CheckpointManager, verify_checkpoint
+    mgr = CheckpointManager(tmp_path, every=1, keep=5)
+    t1, t2 = _tiny_tree(1), _tiny_tree(2)
+    mgr.maybe_save(1, t1, force=True)
+    mgr.maybe_save(2, t2, force=True)
+    shard = faults.truncate_shard(tmp_path)          # damages step 2
+    assert "step_00000002" in str(shard)
+    problems = verify_checkpoint(tmp_path, 2)
+    assert problems and any("unreadable" in p for p in problems)
+    assert not verify_checkpoint(tmp_path, 1)
+    step, tree, _ = mgr.restore_latest(_tiny_tree())
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.asarray(t1["w"]))
+    assert "falling back" in capsys.readouterr().out
+
+
+def test_restore_falls_back_on_crc_mismatch(tmp_path):
+    from repro.checkpoint.store import CheckpointManager, verify_checkpoint
+    mgr = CheckpointManager(tmp_path, every=1, keep=5)
+    mgr.maybe_save(3, _tiny_tree(3), force=True)
+    mgr.maybe_save(4, _tiny_tree(4), force=True)
+    faults.bit_flip_shard(tmp_path)                  # silent corruption
+    problems = verify_checkpoint(tmp_path, 4)
+    assert problems and any("CRC mismatch" in p for p in problems)
+    step, tree, _ = mgr.restore_latest(_tiny_tree())
+    assert step == 3
+
+
+def test_restore_raises_when_every_step_is_damaged(tmp_path):
+    from repro.checkpoint.store import CheckpointManager
+    mgr = CheckpointManager(tmp_path, every=1, keep=5)
+    mgr.maybe_save(1, _tiny_tree(1), force=True)
+    mgr.maybe_save(2, _tiny_tree(2), force=True)
+    faults.bit_flip_shard(tmp_path, step=1)
+    faults.bit_flip_shard(tmp_path, step=2)
+    with pytest.raises(IOError, match="no restorable checkpoint"):
+        mgr.restore_latest(_tiny_tree())
+
+
+def test_tmp_residue_is_garbage_collected(tmp_path):
+    from repro.checkpoint.store import (complete_steps, latest_step,
+                                        save_checkpoint)
+    # a crash mid-write leaves a .tmp directory behind
+    residue = tmp_path / "step_00000099.tmp"
+    residue.mkdir(parents=True)
+    (residue / "junk.npy").write_bytes(b"partial")
+    assert latest_step(tmp_path) is None             # .tmp is not a step
+    save_checkpoint(tmp_path, 100, _tiny_tree())
+    assert not residue.exists()                      # GC swept the residue
+    assert complete_steps(tmp_path) == [100]
+
+
+# ---------------------------------------------------------------------------
+# Autotune-cache chaos
+# ---------------------------------------------------------------------------
+
+SHAPE = dict(m=64, o=48, n=96, k=48)
+
+
+def test_poisoned_cache_entry_degrades_to_static(tmp_path):
+    path = str(tmp_path / "cache.json")
+    res = autotune.resolve_blocks(**SHAPE, itemsize=4, impl="pallas",
+                                  tune="sweep", cache_path=path)
+    assert res.source == "swept"
+    faults.poison_autotune_entry(path)
+    again = autotune.resolve_blocks(**SHAPE, itemsize=4, impl="pallas",
+                                    tune="cached", cache_path=path)
+    assert again.source == "static"
+    assert again.blocks == ops.choose_blocks(**SHAPE, itemsize=4)
+
+
+def test_sweep_quarantines_failing_candidate():
+    cands = autotune.candidate_blocks(**SHAPE, itemsize=4)
+    assert len(cands) >= 2
+    victim = cands[1]                 # a non-static candidate
+
+    def only_victim(ctx):
+        return (ctx.get("bm"), ctx.get("bo"), ctx.get("bn")) == \
+            (victim.bm, victim.bo, victim.bn)
+
+    with faults.force_impl_failure("pallas", when=only_victim):
+        best, record = autotune.sweep_blocks(**SHAPE, itemsize=4,
+                                             impl="pallas")
+    assert record["source"] == "sweep"
+    assert len(record["quarantined"]) == 1
+    assert record["quarantined"][0]["bm"] == victim.bm
+    assert "InjectedKernelFault" in record["quarantined"][0]["error"]
+    assert (best.bm, best.bo, best.bn) != (victim.bm, victim.bo, victim.bn)
+    assert len(record["candidates"]) == len(cands) - 1
+
+
+def test_sweep_all_candidates_failing_falls_back_static(tmp_path):
+    path = tmp_path / "cache.json"
+    with faults.force_impl_failure("pallas"):
+        res = autotune.resolve_blocks(**SHAPE, itemsize=4, impl="pallas",
+                                      tune="sweep", cache_path=str(path))
+    assert res.source == "static"
+    assert res.blocks == ops.choose_blocks(**SHAPE, itemsize=4)
+    assert not path.exists()          # a failed sweep is never cached
+
+
+def test_update_cache_concurrent_writers_union(tmp_path):
+    path = str(tmp_path / "cache.json")
+    autotune.save_cache({"seed": {"source": "sweep", "bm": 8, "bo": 8,
+                                  "bn": 8, "vmem_bytes": 1}}, path)
+    errs = []
+
+    def writer(i):
+        try:
+            for j in range(10):
+                autotune.update_cache(
+                    {f"w{i}_{j}": {"source": "sweep", "bm": 8, "bo": 8,
+                                   "bn": 8, "vmem_bytes": 1}}, path)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    entries = autotune.load_cache(path)
+    # no writer's entries were dropped by another's read-modify-write
+    assert set(entries) == {"seed"} | {f"w{i}_{j}"
+                                       for i in range(4) for j in range(10)}
+
+
+# ---------------------------------------------------------------------------
+# Serving-path guards (the launcher end of the story)
+# ---------------------------------------------------------------------------
+
+def test_greedy_generate_overrun_raises():
+    from repro.configs import get_smoke
+    from repro.launch import serve
+    cfg = dataclasses.replace(get_smoke("olmo-1b"), sparse_serving=True)
+    from repro.models import build_model
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                cfg.vocab_size)
+    with pytest.raises(ValueError, match="KV cache overrun"):
+        serve.greedy_generate(bundle, params, prompt, steps=8, max_len=16)
+    # the exact boundary is fine: prompt + steps + 1 == max_len
+    toks = serve.greedy_generate(bundle, params, prompt, steps=2, max_len=19)
+    assert toks.shape == (2, 3)
+
+
+@pytest.mark.slow
+def test_serve_guard_quarantines_injected_nan(tmp_path):
+    from repro.launch import serve
+    report_path = tmp_path / "degradation.json"
+    results = serve.main(["--arch", "olmo-1b", "--smoke", "--batch", "2",
+                          "--prompt-len", "16", "--gen-steps", "2",
+                          "--sparsity", "0.5", "--guard", "--inject-nan",
+                          "--report", str(report_path)])
+    g = results["guard"]
+    assert g["injected"] in g["quarantined"]
+    assert any(e["event"] == "nan_trip" and e["attributable"]
+               for e in g["events"])
+    assert g["degraded_mix"]                      # served a degraded mix
+    # serving continued: parity on the repaired plan plus real throughput
+    assert results["plan"]["parity_max_abs_diff"] <= 2e-2
+    assert results["sparse"]["tokens_per_s"] > 0
+    on_disk = json.loads(report_path.read_text())
+    assert on_disk["guard"]["quarantined"] == g["quarantined"]
+
+
+@pytest.mark.slow
+def test_serve_guard_ladder_survives_forced_pallas_failure():
+    from repro.launch import serve
+    with faults.force_impl_failure("pallas"):
+        results = serve.main(["--arch", "olmo-1b", "--smoke", "--batch", "2",
+                              "--prompt-len", "16", "--gen-steps", "2",
+                              "--sparsity", "0.5", "--impl", "pallas",
+                              "--guard"])
+    g = results["guard"]
+    assert g["degradations"]                      # the ladder fired
+    assert all(d["from_impl"] == "pallas" for d in g["degradations"])
+    assert g["degraded_mix"] and not g["quarantined"]
+    assert results["plan"]["engine_stats"].get("degraded_dispatch", 0) > 0
+    assert results["sparse"]["tokens_per_s"] > 0

@@ -19,6 +19,23 @@ def _load_serve_bench():
     return mod
 
 
+def test_serve_bench_failures_exit_nonzero(tmp_path, capsys):
+    """A run with recorded failures must exit nonzero AND still write the
+    report with the failures in ``meta.failures`` — CI archives the JSON
+    but trusts the exit code, so a green exit over a partial report would
+    silently drop an arch from the regression gate."""
+    sb = _load_serve_bench()
+    out = tmp_path / "bench_serve.json"
+    rc = sb.main(["--smoke", "--out", str(out),
+                  "--archs", "no-such-arch,also-bogus"])
+    assert rc != 0
+    report = json.loads(out.read_text())
+    fails = report["meta"]["failures"]
+    assert len(fails) == 2
+    assert any("no-such-arch" in f for f in fails)
+    assert "no-such-arch" in capsys.readouterr().err
+
+
 @pytest.mark.slow
 def test_serve_bench_smoke_gate(tmp_path):
     """Smoke bench must pass its gate (rc 0: every arch benched, parity
