@@ -20,6 +20,12 @@ paper's 50% CONV pruning).  For every shape we time:
                             plus a numerical parity check vs the dense
                             reference (must stay exact-ish: rtol 1e-5 f32).
 
+A ``decode`` section adds skinny-M rows (m <= `ops.SKINNY_M`, the serving
+decode step's GEMM shape) timing the routed decode path against the
+scatter-densify+dot baseline the fallback used to pay per token, plus
+column-combining packing density (KB before/after `pack_columns`, per-block
+occupancy) for each pattern.
+
 Writes ``BENCH_kernels.json`` at the repo root so later PRs have a measured
 trajectory to beat.  ``--smoke`` runs a <60 s subset for CI regression
 gating.
@@ -48,6 +54,8 @@ from jax.experimental import pallas as pl                     # noqa: E402
 from repro.core.pruning import to_balanced_sparse             # noqa: E402
 from repro.kernels import ops, ref                            # noqa: E402
 from repro.kernels.autotune import bench_time as timeit       # noqa: E402
+from repro.kernels.tile_format import (invert_perm,           # noqa: E402
+                                       max_block_count, pack_columns)
 from repro.models.cnn import (alexnet_layers, resnet50_layers,  # noqa: E402
                               vgg16_layers)
 
@@ -187,6 +195,89 @@ def bench_network(net: str, layers, *, m_cap, max_layers, iters,
     }
 
 
+# ---------------------------------------------------------------------------
+# Decode-shaped rows (skinny M): the serving decode step's GEMM shape
+# ---------------------------------------------------------------------------
+
+# (m, n, o) — m is a decode batch (<= ops.SKINNY_M), n/o are hidden dims;
+# k = n // 2 (50% balanced pruning) as everywhere else in this bench.
+DECODE_SHAPES = {"smoke": [(4, 512, 512)],
+                 "full": [(1, 1024, 1024), (4, 1024, 1024), (8, 2048, 2048)]}
+
+
+def bench_decode(shapes, *, iters) -> dict:
+    """Skinny-M rows: the per-token decode GEMM the serving loop actually
+    runs.  Columns:
+
+    * ``xla_scatter_dot`` — densify (scatter) + dot, jitted: what the XLA
+      fallback used to pay *every decode step* before skinny routing.
+    * ``seed_gather``     — the seed gather+einsum (``impl="xla_gather"``).
+    * ``tiled_decode``    — the routed decode path (`ops.balanced_spmm`
+      with the skinny branch engaged; Mosaic-compiled tiled kernel on TPU,
+      the gather formulation on CPU).
+
+    Also reports what column-combining (`tile_format.pack_columns`) buys
+    each pattern at the static model's bn: KB before/after packing and the
+    per-block occupancy ``(k / NB) / KB`` (1.0 == every padded slot full).
+    """
+    rows = []
+    for m, n, o in shapes:
+        k = max(8, n // 2)
+        key = zlib.crc32(f"decode/{m}x{n}x{o}".encode()) % (1 << 31)
+        x = jax.random.normal(jax.random.key(key), (m, n), jnp.float32)
+        w = jax.random.normal(jax.random.key(key + 1), (o, n), jnp.float32)
+        sp = to_balanced_sparse(w, k=k)
+
+        f_scat = jax.jit(lambda a, v, i, n=n: jnp.dot(
+            a, ref.balanced_dense(v, i, n).T))
+        f_seed = jax.jit(lambda a, v, i, n=n: ops.balanced_spmm(
+            a, v, i, n_in=n, impl="xla_gather"))
+        f_dec = jax.jit(lambda a, v, i, n=n: ops.balanced_spmm(
+            a, v, i, n_in=n, impl="pallas" if _PALLAS_COMPILED else "xla"))
+        t_scat = timeit(f_scat, x, sp.values, sp.indices, iters=iters)
+        t_seed = timeit(f_seed, x, sp.values, sp.indices, iters=iters)
+        t_dec = timeit(f_dec, x, sp.values, sp.indices, iters=iters)
+        got = np.asarray(f_dec(x, sp.values, sp.indices))
+        want = np.asarray(ref.balanced_spmm_ref(x, sp.values, sp.indices))
+        err = float(np.max(np.abs(got - want))
+                    / max(np.max(np.abs(want)), 1e-9))
+
+        blk = ops.choose_blocks(m, o, n, k)
+        idx = np.asarray(sp.indices)
+        mask = np.zeros((o, n), bool)
+        np.put_along_axis(mask, idx, True, axis=1)
+        perm = pack_columns(mask, blk.bn)
+        npad = perm.shape[0]
+        nb = npad // blk.bn
+        kb_un = max_block_count(idx, n, blk.bn)
+        pidx = np.sort(invert_perm(perm)[idx], axis=1)
+        kb_pk = max_block_count(pidx, npad, blk.bn)
+        row = {
+            "m": m, "n": n, "o": o, "k": k,
+            "times_s": {"xla_scatter_dot": t_scat, "seed_gather": t_seed,
+                        "tiled_decode": t_dec},
+            "speedup_decode_vs_scatter_dot": t_scat / max(t_dec, 1e-12),
+            "rel_err": err, "parity_ok": bool(err < 1e-5),
+            "pack": {"bn": blk.bn, "nb": nb,
+                     "kb_unpacked": kb_un, "kb_packed": kb_pk,
+                     "occupancy_unpacked": (k / nb) / kb_un,
+                     "occupancy_packed": (k / nb) / kb_pk},
+        }
+        rows.append(row)
+        print(f"  decode    M={m:5d} N={n:5d} O={o:4d} "
+              f"scatter={t_scat * 1e3:8.2f}ms decode={t_dec * 1e3:8.2f}ms "
+              f"x{row['speedup_decode_vs_scatter_dot']:5.1f}  "
+              f"[KB {kb_un}->{kb_pk}]")
+    ups = [r["speedup_decode_vs_scatter_dot"] for r in rows]
+    return {
+        "rows": rows,
+        "geomean_speedup_decode_vs_scatter_dot":
+            float(np.exp(np.mean(np.log(ups)))) if ups else None,
+        "all_rows_faster": bool(all(s > 1.0 for s in ups)),
+        "parity_all_ok": bool(all(r["parity_ok"] for r in rows)),
+    }
+
+
 # The main timing column compares real compiled code: on TPU
 # (REPRO_PALLAS_INTERPRET=0) that is the Mosaic-compiled tiled kernel; on
 # CPU it is the tiled path's XLA fallback (interpret mode is an emulator —
@@ -219,6 +310,9 @@ def main(argv=None):
                                      max_layers=max_layers, iters=iters,
                                      pallas_m=pallas_m,
                                      pallas_budget=pallas_budget)
+    print("decode:")
+    decode = bench_decode(
+        DECODE_SHAPES["smoke" if args.smoke else "full"], iters=iters)
     report = {
         "meta": {
             "bench": "balanced_spmm seed-gather vs tiled decode-and-matmul",
@@ -229,6 +323,7 @@ def main(argv=None):
             "wall_s": None,         # filled below
         },
         "networks": results,
+        "decode": decode,
     }
     report["meta"]["wall_s"] = round(time.time() - t0, 2)
     pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
@@ -236,12 +331,17 @@ def main(argv=None):
 
     vgg = results["vgg16"]
     parity = all(r.get("pallas_ok", True)
-                 for n in results.values() for r in n["layers"])
-    faster = (vgg["geomean_speedup_tiled_vs_seed"] or 0) > 1.0
+                 for n in results.values() for r in n["layers"]) \
+        and decode["parity_all_ok"]
+    faster = (vgg["geomean_speedup_tiled_vs_seed"] or 0) > 1.0 \
+        and decode["all_rows_faster"]
     print(f"vgg16 geomean speedup: {vgg['geomean_speedup_tiled_vs_seed']:.2f}"
-          f"  pallas parity: {'ok' if parity else 'FAIL'}")
+          f"  decode geomean vs scatter+dot: "
+          f"{decode['geomean_speedup_decode_vs_scatter_dot']:.2f}"
+          f"  parity: {'ok' if parity else 'FAIL'}")
     # smoke is a correctness/regression gate (shapes too small to be
-    # perf-representative); full mode also gates on the VGG-16 speedup.
+    # perf-representative); full mode also gates on the VGG-16 speedup and
+    # on every decode row beating the scatter+dot baseline.
     ok = parity if args.smoke else (parity and faster)
     return 0 if ok else 1
 

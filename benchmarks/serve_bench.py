@@ -90,8 +90,8 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen_steps: int,
     max_len = prompt_len + gen_steps + 2
 
     plan = engine_plan.plan_model(cfg, params, sparsity=sparsity,
-                                  m_hint=batch * prompt_len, tune=tune,
-                                  tune_cache=tune_cache)
+                                  m_hint=batch * prompt_len, decode_m=batch,
+                                  tune=tune, tune_cache=tune_cache)
     assert plan.sparse_layer_count > 0, f"{arch}: no sparse layers planned"
     sparse_params = {**params, "sparse_plan": plan}
     ref_params = engine_plan.masked_dense_params(params, plan)
@@ -115,6 +115,7 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen_steps: int,
         "batch": batch, "prompt_len": prompt_len, "gen_steps": gen_steps,
         "parity_max_abs_diff": diff,
         "plan": {"sparse_layers": plan.sparse_layer_count,
+                 "packed_layers": plan.packed_layer_count,
                  "mode_mix": plan.mode_mix(), "impl_mix": plan.impl_mix(),
                  "tuned_mix": plan.tuned_mix(),
                  "tune_deltas": [[nm, list(t), list(s)]
@@ -140,11 +141,44 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen_steps: int,
     return cell
 
 
+def compare_reports(new: dict, committed: dict, *, tol: float = 0.05) -> list:
+    """Regression check against a committed report: every sparse-vs-dense
+    speedup cell in ``committed`` must be matched within ``tol`` (5%
+    default) by the fresh run.  Speedup *ratios* are compared, not tok/s —
+    machine speed cancels out of the ratio, so a committed report from one
+    container is comparable to a fresh run on another as long as both used
+    the same mode (shapes).  Returns a list of regression strings (empty ==
+    pass); archs or cells present only on one side are skipped (coverage is
+    the main gate's job, not the comparator's).
+    """
+    regressions = []
+    for arch, old_cell in (committed.get("archs") or {}).items():
+        new_cell = (new.get("archs") or {}).get(arch)
+        if not new_cell:
+            continue
+        for phase in ("prefill", "decode"):
+            key = f"speedup_sparse_vs_dense_{phase}"
+            old_v, new_v = old_cell.get(key), new_cell.get(key)
+            if old_v is None or new_v is None:
+                continue
+            if new_v < old_v * (1.0 - tol):
+                regressions.append(
+                    f"{arch} {phase}: speedup {new_v:.4f} < committed "
+                    f"{old_v:.4f} - {tol:.0%} tolerance")
+    return regressions
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: 3 archs, small shapes, <60 s")
     ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_serve.json"))
+    ap.add_argument("--compare", default=None, metavar="PATH",
+                    help="committed BENCH_serve.json to regression-check "
+                         "against: exit nonzero if any sparse-vs-dense "
+                         "speedup cell regresses >5%% (ratios compared, so "
+                         "machine speed cancels; run the same mode as the "
+                         "committed report)")
     ap.add_argument("--archs", default=None,
                     help="comma-separated arch override")
     ap.add_argument("--batch", type=int, default=None)
@@ -221,6 +255,22 @@ def main(argv=None):
         for f in failures:
             print(f"  {f}", file=sys.stderr)
         return 1
+    if args.compare:
+        committed = json.loads(pathlib.Path(args.compare).read_text())
+        if committed.get("meta", {}).get("mode") != report["meta"]["mode"]:
+            print(f"compare: mode mismatch (committed "
+                  f"{committed.get('meta', {}).get('mode')!r} vs run "
+                  f"{report['meta']['mode']!r}) — cells are not comparable",
+                  file=sys.stderr)
+            return 1
+        regs = compare_reports(report, committed)
+        if regs:
+            print(f"compare: {len(regs)} speedup cell(s) regressed vs "
+                  f"{args.compare}:", file=sys.stderr)
+            for r in regs:
+                print(f"  {r}", file=sys.stderr)
+            return 1
+        print(f"compare: no speedup regressions vs {args.compare}")
     return 0 if ok else 1
 
 

@@ -79,12 +79,17 @@ def next_impl(impl: str) -> str | None:
 def _tiled_to_flat_stacked(w: TiledBalanced):
     """`tiled_to_flat` over any leading stacked axes ([*lead, O, NB, KB]):
     lead axes fold into the row axis (every row carries the same K under
-    the balance invariant), decode flat, restack."""
+    the balance invariant), decode flat, restack.  Packed encodings pass
+    their (lead-broadcast, identical per slice) perm through so the flat
+    indices come out in original column order, ascending."""
     lead = w.values.shape[:-3]
+    perm = w.perm
+    if perm is not None and perm.ndim > 1:
+        perm = perm.reshape(-1, perm.shape[-1])[0]
     flat = TiledBalanced(w.values.reshape(-1, *w.values.shape[-2:]),
                          w.indices.reshape(-1, *w.indices.shape[-2:]),
                          w.counts.reshape(-1, w.counts.shape[-1]),
-                         n_in=w.n_in, bn=w.bn)
+                         n_in=w.n_in, bn=w.bn, perm=perm)
     vals, idx = tiled_to_flat(flat)
     k = vals.shape[-1]
     o = w.values.shape[-3]
@@ -118,6 +123,7 @@ def demote_layer(lp: LayerPlan, *, to_impl: str | None = None,
             weights = weights.reshape(spec.n_out, ci, spec.hk, spec.wk)
         new_spec = dataclasses.replace(spec, impl="dense", k=spec.n_in,
                                        blocks=None, block_k=0,
+                                       blocks_decode=None, packed=False,
                                        degraded_from=origin)
         return LayerPlan(spec=new_spec, weights=weights)
     if isinstance(lp.weights, TiledBalanced):
@@ -125,7 +131,9 @@ def demote_layer(lp: LayerPlan, *, to_impl: str | None = None,
         weights: Any = BalancedSparse(vals, idx, spec.n_in)
     else:
         weights = lp.weights             # xla <-> xla_gather share a format
+    # the flat format carries no perm: packing provenance ends here
     return LayerPlan(spec=dataclasses.replace(spec, impl=to_impl,
+                                              packed=False,
                                               degraded_from=origin),
                      weights=weights)
 
@@ -136,17 +144,25 @@ def apply_fc(x: Array, lp: LayerPlan) -> Array:
     ``x``: ``[..., N]`` -> ``[..., O]``.  Dispatches on ``lp.spec.impl``:
     ``dense`` is a plain matmul on the masked weights; ``pallas`` runs the
     pre-encoded `kernels.ops.tiled_spmm` at the plan's (possibly autotuned)
-    ``spec.blocks``; ``xla``/``xla_gather`` run the flat-format
-    `kernels.ops.balanced_spmm` fallbacks.
+    ``spec.blocks`` — or ``spec.blocks_decode`` when M is decode-shaped
+    (M <= `kernels.ops.SKINNY_M`; static at trace time, so the routing is
+    free and each compiled executable bakes in its shape's blocks);
+    ``xla``/``xla_gather`` run the flat-format `kernels.ops.balanced_spmm`
+    fallbacks, which route skinny M internally.
     """
     spec = lp.spec
     if spec.impl == "dense":
         STATS["dense_matmul"] += 1
         return jnp.dot(x, lp.weights.T,
                        preferred_element_type=jnp.float32).astype(x.dtype)
-    _count_dispatch(spec)
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    skinny = m <= kernel_ops.SKINNY_M
+    _count_dispatch(spec, *(("decode_dispatch",) if skinny else ()))
     if spec.impl == "pallas":
-        blk = spec.blocks
+        blk = spec.blocks_decode if skinny and spec.blocks_decode \
+            else spec.blocks
         return kernel_ops.tiled_spmm(x, lp.weights, block_m=blk.bm,
                                      block_o=blk.bo)
     sp = lp.weights
@@ -158,12 +174,16 @@ def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
     """Per-expert planned projection: ``x [E, ..., N] -> [E, ..., O]``.
 
     ``lp.weights`` carry a leading expert axis (plan built from a rank-3
-    ``[E, d, f]`` MoE tensor, scan-sliced to one layer).  The Pallas impl
-    scans `kernels.ops.tiled_spmm_batched` over E (pre-encoded, decode
-    inside the kernel); the XLA fallbacks scan the flat-format
-    `kernels.ops.balanced_spmm` the same way.  Counts
-    ``expert_balanced_spmm`` in `STATS` so MoE serving can assert the
-    per-expert path dispatched.
+    ``[E, d, f]`` MoE tensor, scan-sliced to one layer).  Every impl is a
+    single *fused* dispatch over all experts — the Pallas impl runs
+    `kernels.ops.tiled_spmm_batched` (E is a grid axis of one batched
+    kernel), the XLA fallbacks run `kernels.ops.balanced_spmm_batched`
+    (gather+einsum when skinny, unrolled densify+dot when wide).  The
+    per-expert `lax.scan` that used to live
+    here paid E sequential dispatches per layer, which at decode capacities
+    dwarfed the math (the 0.10x MoE decode cliff, BENCH_serve PR 5).
+    Counts ``expert_balanced_spmm`` in `STATS` so MoE serving can assert
+    the per-expert path dispatched.
     """
     spec = lp.spec
     if spec.impl == "dense":
@@ -171,20 +191,20 @@ def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
         return jnp.einsum("e...n,eon->e...o", x,
                           lp.weights.astype(x.dtype),
                           preferred_element_type=jnp.float32).astype(x.dtype)
-    _count_dispatch(spec, "expert_balanced_spmm")
+    m = 1
+    for d in x.shape[1:-1]:
+        m *= d
+    skinny = m <= kernel_ops.SKINNY_M
+    _count_dispatch(spec, "expert_balanced_spmm",
+                    *(("decode_dispatch",) if skinny else ()))
     if spec.impl == "pallas":
-        blk = spec.blocks
+        blk = spec.blocks_decode if skinny and spec.blocks_decode \
+            else spec.blocks
         return kernel_ops.tiled_spmm_batched(x, lp.weights, block_m=blk.bm,
                                              block_o=blk.bo)
     sp = lp.weights
-
-    def body(_, xs):
-        xe, ve, ie = xs
-        y = kernel_ops.balanced_spmm(xe, ve, ie, n_in=spec.n_in,
-                                     impl=spec.impl, block_k=spec.block_k)
-        return None, y
-    _, y = jax.lax.scan(body, None, (x, sp.values, sp.indices))
-    return y
+    return kernel_ops.balanced_spmm_batched(x, sp.values, sp.indices,
+                                            n_in=spec.n_in, impl=spec.impl)
 
 
 def apply_conv(x: Array, lp: LayerPlan) -> Array:

@@ -78,7 +78,7 @@ class Violation:
     """One failed structural check on one layer."""
     layer: str
     check: str      # index_range | count_capacity | balance | block_shape |
-                    # finite | dtype | weights_type | shape
+                    # finite | dtype | weights_type | shape | perm
     detail: str
 
 
@@ -195,6 +195,25 @@ def _check_tiled(spec, w: TiledBalanced, add) -> None:
         add("index_range", "duplicate column index inside a tile block")
     if not np.isfinite(vals.astype(np.float32)).all():
         add("finite", "non-finite encoded values")
+    # packed-format invariants: a column-combining perm must be a bijection
+    # of the padded column space, and its presence must agree with the
+    # spec's packing provenance (a packed spec with no perm — or vice
+    # versa — means the encoding and the plan record disagree).
+    packed = bool(getattr(spec, "packed", False))
+    if w.perm is None:
+        if packed:
+            add("perm", "spec.packed=True but encoding carries no perm")
+        return
+    if not packed:
+        add("perm", "encoding carries a perm but spec.packed=False")
+    p = np.asarray(w.perm)
+    if p.shape[-1] != nb * w.bn:
+        add("perm", f"perm length {p.shape[-1]} != NB*bn={nb * w.bn}")
+        return
+    prows = p.reshape(-1, p.shape[-1])
+    want = np.arange(prows.shape[1])
+    if any((np.sort(r) != want).any() for r in prows):
+        add("perm", "perm is not a bijection of [0, NB*bn)")
 
 
 def _check_flat(spec, w: BalancedSparse, add) -> None:
@@ -314,19 +333,10 @@ def _probe_tol(dtype) -> float:
     return 1e-4 if jnp.dtype(dtype) == jnp.float32 else 2e-2
 
 
-def probe_layer(lp: LayerPlan, *, m: int = 4,
-                tol: float | None = None) -> Tuple[float | None, str | None]:
-    """Run one layer's planned path on a deterministic probe input and
-    compare against its own densified weights (the dense ladder floor).
-
-    Returns ``(max_abs_diff, error)``: error is None on success, else a
-    one-line reason (exception during dispatch, non-finite output, or
-    parity beyond ``tol``).  This is both `validate_plan(probe=True)`'s
-    spot-check and `harden_plan`'s per-rung health test — an impl that
-    cannot produce the dense answer on a 4-row probe has no business on
-    the token path.
-    """
-    view = _probe_view(lp)
+def _probe_one(view: LayerPlan, m: int,
+               tol: float | None) -> Tuple[float | None, str | None]:
+    """One probe shape: run the planned path on an m-row input and compare
+    against the layer's own densified weights (the dense ladder floor)."""
     spec = view.spec
     x = _probe_input(view, m)
     # a modeled VMEM-budget trip is a failure even if interpret mode would
@@ -356,8 +366,38 @@ def probe_layer(lp: LayerPlan, *, m: int = 4,
     return diff, None
 
 
+def probe_layer(lp: LayerPlan, *, m: int = 16, m_decode: int | None = None,
+                tol: float | None = None) -> Tuple[float | None, str | None]:
+    """Probe one layer's planned path at BOTH serving shapes: the prefill
+    shape (``m`` rows) and the layer's decode shape (``m_decode``, default
+    the plan-recorded ``spec.decode_m``, else 4).  `execute.apply_*` routes
+    skinny M onto different kernels and block choices than wide M, so a
+    single-shape probe would certify a path serving never runs — a decode
+    kernel that cannot lower, or decode blocks that trip VMEM, must demote
+    the layer just like a prefill failure.
+
+    Returns ``(max_abs_diff, error)`` — the worst parity diff across the
+    probed shapes; error (None on success) is prefixed with the failing
+    shape (``m=<mm>:``).  This is both `validate_plan(probe=True)`'s
+    spot-check and `harden_plan`'s per-rung health test.
+    """
+    view = _probe_view(lp)
+    spec = view.spec
+    # conv probes ignore m (the probe input is a fixed small NHWC image)
+    shapes = [m] if spec.kind == "conv" else sorted(
+        {m, m_decode or spec.decode_m or 4})
+    worst: float | None = None
+    for mm in shapes:
+        diff, err = _probe_one(view, mm, tol)
+        if err is not None:
+            return diff, f"m={mm}: {err}"
+        if diff is not None and (worst is None or diff > worst):
+            worst = diff
+    return worst, None
+
+
 def validate_plan(plan: ModelPlan, *, strict: bool = True,
-                  probe: bool = False, probe_m: int = 4,
+                  probe: bool = False, probe_m: int = 16,
                   tol: float | None = None) -> PlanReport:
     """Check every LayerPlan's structural invariants (and optionally probe
     numerical parity).  ``strict=True`` raises `PlanValidationError` naming
@@ -389,7 +429,7 @@ def _meta_set(meta: Tuple, key: str, value) -> Tuple:
     return tuple(d.items())
 
 
-def harden_plan(plan: ModelPlan, *, probe_m: int = 4,
+def harden_plan(plan: ModelPlan, *, probe_m: int = 16,
                 tol: float | None = None
                 ) -> Tuple[ModelPlan, Tuple[Degradation, ...]]:
     """Probe every layer's impl and walk failures down the ladder.

@@ -136,10 +136,34 @@ class PlanSpec:
                                     # set when the guard ladder demoted or
                                     # quarantined this layer ("" = never
                                     # degraded; see engine.guard)
+    m_hint: int = 0                 # prefill GEMM M ``blocks`` was resolved
+                                    # at (0 = pre-provenance plan)
+    decode_m: int = 0               # decode-step GEMM M this plan serves
+                                    # (``blocks_decode``'s resolve shape;
+                                    # 0 = none recorded, guard probes 4)
+    blocks_decode: kernel_ops.BlockChoice | None = None
+                                    # decode-shaped BlockChoice (resolved at
+                                    # M = decode_m); execute routes skinny-M
+                                    # dispatches onto it
+    packed: bool = False            # column-combining perm recorded on the
+                                    # encoding (TiledBalanced.perm)
+    pack_kb: Tuple = ()             # (kb_unpacked, kb_packed) provenance
+                                    # when packed
 
     @property
     def is_sparse(self) -> bool:
         return self.impl != "dense"
+
+    def __hash__(self):
+        # Cached: the spec is jit aux data, re-hashed on every dispatch-
+        # cache lookup of every jitted call — at serving that is per decoded
+        # token, per layer.  Safe to memoize on a frozen dataclass.
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash(tuple(getattr(self, f.name)
+                           for f in dataclasses.fields(self)))
+            object.__setattr__(self, "_hash", h)
+        return h
 
 
 @dataclasses.dataclass
@@ -173,9 +197,12 @@ class LayerPlan:
                 vf = w.values.reshape(-1, *w.values.shape[-3:])
                 jf = w.indices.reshape(-1, *w.indices.shape[-3:])
                 cf = w.counts.reshape(-1, *w.counts.shape[-2:])
+                pf = None if w.perm is None else \
+                    w.perm.reshape(-1, w.perm.shape[-1])
                 dense = jnp.stack([
-                    tiled_to_dense(TiledBalanced(vf[i], jf[i], cf[i],
-                                                 w.n_in, w.bn))
+                    tiled_to_dense(TiledBalanced(
+                        vf[i], jf[i], cf[i], w.n_in, w.bn,
+                        perm=None if pf is None else pf[i]))
                     for i in range(vf.shape[0])])
                 return dense.reshape(*lead, *dense.shape[-2:])
             return tiled_to_dense(w)
@@ -209,7 +236,18 @@ class ModelPlan:
     meta: Tuple = ()
 
     def tree_flatten(self):
-        names = tuple(sorted(self.layers))
+        # Cached on the identity (+ length, to catch in-place key edits) of
+        # the layers dict: the plan flattens on every jitted call's argument
+        # traversal — per decoded token in serving — and re-sorting the
+        # names each step is pure per-token overhead.  All plan transforms
+        # in this repo rebuild the dict, which invalidates the cache.
+        cached = self.__dict__.get("_flat_names")
+        if cached is None or cached[0] is not self.layers \
+                or len(cached[1]) != len(self.layers):
+            names = tuple(sorted(self.layers))
+            cached = (self.layers, names)
+            self.__dict__["_flat_names"] = cached
+        names = cached[1]
         return tuple(self.layers[n] for n in names), (names, self.meta)
 
     @classmethod
@@ -266,6 +304,11 @@ class ModelPlan:
     def sparse_layer_count(self) -> int:
         return sum(1 for lp in self.layers.values() if lp.spec.is_sparse)
 
+    @property
+    def packed_layer_count(self) -> int:
+        """Layers whose encoding carries a column-combining perm."""
+        return sum(1 for lp in self.layers.values() if lp.spec.packed)
+
     def summary(self) -> str:
         lines = [f"{'layer':14s} {'mode':>8s} {'impl':>10s} {'O':>6s} "
                  f"{'N':>6s} {'K':>6s} {'spars':>6s} {'Dmem(Kb)':>9s}"]
@@ -306,15 +349,50 @@ def default_impl(*, balanced: bool, w_sparsity: float,
 # Single-layer plan construction
 # ---------------------------------------------------------------------------
 
+def _maybe_pack(idx: np.ndarray, vals, pattern2: np.ndarray, n_in: int,
+                bn: int, block_k: int):
+    """Try column-combining packing (`tile_format.pack_columns`) on a flat
+    balanced encoding before tiling.
+
+    ``idx`` [..., O, K] ascending global indices, ``vals`` the matching
+    value array, ``pattern2`` [rows, n_in] the pooled mask the shared KB is
+    computed over.  Adopted only when the packed per-block capacity
+    strictly shrinks KB (otherwise the permutation costs an input gather
+    for nothing).  Returns ``(idx, vals, block_k, n_enc, perm, pack_kb)``:
+    perm is None when not adopted (and ``n_enc == n_in``); when adopted,
+    indices are remapped into packed column space (re-sorted ascending),
+    ``n_enc`` is the padded packed width NB*bn, and ``pack_kb`` records
+    ``(kb_unpacked, kb_packed)`` for spec provenance.
+    """
+    from ..kernels import tile_format
+    nb = -(-n_in // bn)
+    if nb <= 1:
+        return idx, vals, block_k, n_in, None, ()
+    perm = tile_format.pack_columns(pattern2, bn)
+    inv = tile_format.invert_perm(perm)
+    pidx = inv[idx]
+    order = np.argsort(pidx, axis=-1, kind="stable")
+    pidx = np.take_along_axis(pidx, order, axis=-1).astype(np.int32)
+    npack = nb * bn
+    kb_packed = tile_format.max_block_count(
+        pidx.reshape(-1, pidx.shape[-1]), npack, bn)
+    if kb_packed >= block_k:
+        return idx, vals, block_k, n_in, None, ()
+    vals = jnp.take_along_axis(vals, jnp.asarray(order), axis=-1)
+    return pidx, vals, kb_packed, npack, perm, (block_k, kb_packed)
+
+
 def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                      kind: str = "fc", layer_spec: LayerSpec | None = None,
-                     m_hint: int = 128, impl: str | None = None,
+                     m_hint: int = 128, decode_m: int = 4,
+                     impl: str | None = None,
                      ifm_sparsity: float = 0.0, elem_bits: int = 16,
                      weight_buffer_bits: int | None = None,
                      n_is: int = 7, n_pe: int = 32,
                      dtype=None, stride: int = 1,
                      conv_padding: Any = "SAME", tune: str = "off",
-                     tune_cache: str | None = None) -> LayerPlan:
+                     tune_cache: str | None = None,
+                     pack: bool = True) -> LayerPlan:
     """Derive one LayerPlan from a dense weight (output-major ``[O, N]`` for
     fc, ``[Co, Ci, Hk, Wk]`` for conv) and an optional pruning mask.
 
@@ -322,8 +400,12 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
     must be concrete; ``w``'s values may be tracers.  ``impl`` overrides the
     §VI-F policy but degrades to "dense" when the pattern is unbalanced or
     unanalyzable (traced values, no mask) — the mask is still applied.
-    ``m_hint`` is the GEMM M the block autotuner optimizes for (execute
-    re-derives bm for other batch sizes).
+    ``m_hint`` is the prefill GEMM M the block autotuner optimizes for;
+    ``decode_m`` is the decode-step M a second, decode-shaped `BlockChoice`
+    (``PlanSpec.blocks_decode``) is resolved at, so skinny-M dispatches
+    never run prefill-shaped blocks.  ``pack`` enables column-combining
+    packing (`tile_format.pack_columns`) for pallas fc layers when it
+    shrinks the shared per-block capacity KB.
 
     ``tune`` selects the block-choice policy (`kernels.autotune.
     resolve_blocks`): ``"off"`` uses the static VMEM model, ``"cached"``
@@ -391,9 +473,12 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
 
     dt = dtype or w2.dtype
     blocks = None
+    blocks_decode = None
     block_k = 0
     tuned = "static"
     blocks_static = None
+    packed = False
+    pack_kb: Tuple = ()
     if impl == "dense":
         # conv keeps the 4-D layout apply_conv convolves with
         masked = (w * mask_np if mask_np is not None else w) if w.ndim == 4 \
@@ -406,6 +491,9 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                                       impl=impl, tune=tune,
                                       cache_path=tune_cache)
         blocks, tuned, blocks_static = res.blocks, res.source, res.static
+        blocks_decode = autotune.resolve_blocks(
+            decode_m, o, n, k, itemsize=itemsize, impl=impl, tune=tune,
+            cache_path=tune_cache).blocks
         idx = _pattern_indices(pattern, k)                # np [O, K] int32
         vals = jnp.take_along_axis(jnp.asarray(masked2),
                                    jnp.asarray(idx), axis=1).astype(dt)
@@ -413,8 +501,17 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                       _round_up(mask_block_k(pattern, bn=blocks.bn),
                                 _KB_ROUND))
         if impl == "pallas":
+            n_enc, perm = n, None
+            if pack and kind == "fc":
+                idx, vals, block_k, n_enc, perm, pack_kb = _maybe_pack(
+                    idx, vals, pattern, n, blocks.bn, block_k)
             # np indices keep encode_tiled on its host (concrete) path
-            weights = encode_tiled(vals, idx, n, bn=blocks.bn, kb=block_k)
+            tb = encode_tiled(vals, idx, n_enc, bn=blocks.bn, kb=block_k)
+            weights = TiledBalanced(tb.values, tb.indices, tb.counts,
+                                    n_in=n, bn=blocks.bn,
+                                    perm=None if perm is None
+                                    else jnp.asarray(perm))
+            packed = perm is not None
         else:
             weights = BalancedSparse(vals, idx, n)
 
@@ -424,7 +521,9 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                     d_mem_bits=int(flow.d_mem_bits), i_mem_bits=int(flow.i_mem),
                     w_mem_bits=int(flow.w_mem), hk=hk, wk=wk, stride=stride,
                     conv_padding=conv_padding, tuned=tuned,
-                    blocks_static=blocks_static)
+                    blocks_static=blocks_static, m_hint=int(m_hint),
+                    decode_m=int(decode_m), blocks_decode=blocks_decode,
+                    packed=packed, pack_kb=pack_kb)
     return LayerPlan(spec=spec, weights=weights)
 
 
@@ -519,7 +618,8 @@ ZAMBA2_PROJ_NAMES = ("z_proj", "x_proj", "out_proj")
 
 def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                   m_hint: int, cd, tune: str = "off",
-                  tune_cache: str | None = None) -> LayerPlan:
+                  tune_cache: str | None = None, decode_m: int = 4,
+                  pack: bool = True) -> LayerPlan:
     """Plan one stacked projection ``[*lead, n_in, n_out]``.
 
     ``lead`` is any tuple of stacked axes — ``(L,)`` for scanned layers,
@@ -531,6 +631,14 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
     under the ``tune`` policy), and restacked on the leading axes so
     `lax.scan` / the expert loop can slice per-layer weights while the spec
     rides as aux data.
+
+    A second, decode-shaped `BlockChoice` is resolved at ``M = decode_m``
+    (``PlanSpec.blocks_decode``) for skinny-M dispatch.  ``pack`` enables
+    column-combining packing for pallas encodings: one shared permutation
+    over the pooled [g*O, N] pattern (so the whole stack scans with one
+    perm), adopted only when it shrinks the shared KB; the perm leaf is
+    broadcast over the lead axes so per-layer pytree slicing stays
+    shape-consistent.
     """
     lead = w.shape[:-2]
     n_in, n_out = w.shape[-2:]
@@ -551,6 +659,9 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
     masks = np.asarray(ranks < k)                         # [g, O, N] bool
     tuned = "static"
     blk_static = None
+    blk_dec = None
+    packed = False
+    pack_kb: Tuple = ()
     if impl_nm == "dense":
         weights: Any = (wt * masks).reshape(*lead, n_out, n_in)
         blk = None
@@ -561,6 +672,10 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                                       itemsize=itemsize, impl=impl_nm,
                                       tune=tune, cache_path=tune_cache)
         blk, tuned, blk_static = res.blocks, res.source, res.static
+        blk_dec = autotune.resolve_blocks(decode_m, n_out, n_in, k,
+                                          itemsize=itemsize, impl=impl_nm,
+                                          tune=tune,
+                                          cache_path=tune_cache).blocks
         block_k = max(_KB_ROUND, _round_up(
             mask_block_k(masks.reshape(g * n_out, n_in), bn=blk.bn),
             _KB_ROUND))
@@ -569,15 +684,28 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                       axis=-1).astype(np.int32)           # [g, O, K]
         vals = jnp.take_along_axis(wt, jnp.asarray(idx), axis=-1)
         if impl_nm == "pallas":
+            n_enc, perm = n_in, None
+            if pack:
+                idx, vals, block_k, n_enc, perm, pack_kb = _maybe_pack(
+                    idx, vals, masks.reshape(g * n_out, n_in), n_in,
+                    blk.bn, block_k)
             tb = encode_tiled(vals.reshape(g * n_out, k),
-                              idx.reshape(g * n_out, k), n_in,
+                              idx.reshape(g * n_out, k), n_enc,
                               bn=blk.bn, kb=block_k)
             nb = tb.nb
+            perm_leaf = None
+            if perm is not None:
+                packed = True
+                # broadcast over lead so per-layer slicing (scan / probes)
+                # keeps a well-formed [.., NB*bn] perm per slice
+                perm_leaf = jnp.asarray(np.ascontiguousarray(
+                    np.broadcast_to(perm, (*lead, perm.shape[0]))) if lead
+                    else perm)
             weights = TiledBalanced(
                 tb.values.reshape(*lead, n_out, nb, block_k),
                 tb.indices.reshape(*lead, n_out, nb, block_k),
                 tb.counts.reshape(*lead, n_out, nb),
-                n_in=n_in, bn=blk.bn)
+                n_in=n_in, bn=blk.bn, perm=perm_leaf)
         else:
             weights = BalancedSparse(vals.reshape(*lead, n_out, k),
                                      jnp.asarray(idx).reshape(
@@ -592,7 +720,9 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                     d_mem_bits=int(flow.d_mem_bits) * g,
                     i_mem_bits=int(flow.i_mem) * g,
                     w_mem_bits=int(flow.w_mem) * g,
-                    experts=experts, tuned=tuned, blocks_static=blk_static)
+                    experts=experts, tuned=tuned, blocks_static=blk_static,
+                    m_hint=int(m_hint), decode_m=int(decode_m),
+                    blocks_decode=blk_dec, packed=packed, pack_kb=pack_kb)
     return LayerPlan(spec=spec, weights=weights)
 
 
@@ -626,7 +756,8 @@ def _resolve_sparsity(cfg, sparsity: float | None) -> float:
 def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
                      impl: str | None = None, include_mlp: bool = True,
                      include_experts: bool = True,
-                     m_hint: int | None = None, tune: str = "off",
+                     m_hint: int | None = None, decode_m: int | None = None,
+                     pack: bool = True, tune: str = "off",
                      tune_cache: str | None = None) -> ModelPlan:
     """Offline plan for a transformer's projection matrices.
 
@@ -647,6 +778,7 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
              if n in blocks]
     cd = jnp.dtype(cfg.compute_dtype)
     m_hint = m_hint or 256
+    decode_m = decode_m or 4
     layers: Dict[str, LayerPlan] = {}
     for nm in names:
         w = blocks[nm]
@@ -654,7 +786,8 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
             continue
         layers[nm] = _plan_stacked(nm, w, sparsity=sparsity, impl=impl,
                                    m_hint=m_hint, cd=cd, tune=tune,
-                                   tune_cache=tune_cache)
+                                   tune_cache=tune_cache, decode_m=decode_m,
+                                   pack=pack)
     if include_mlp and include_experts and cfg.family == "moe":
         for nm in MOE_EXPERT_NAMES:
             w = blocks.get(nm)
@@ -662,7 +795,8 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
                 continue
             layers[nm] = _plan_stacked(nm, w, sparsity=sparsity, impl=impl,
                                        m_hint=m_hint, cd=cd, tune=tune,
-                                       tune_cache=tune_cache)
+                                       tune_cache=tune_cache,
+                                       decode_m=decode_m, pack=pack)
     meta = (("model", cfg.name), ("sparsity", float(sparsity)),
             ("n_layers", int(cfg.n_layers))) + _tune_meta(tune, layers)
     return ModelPlan(layers=layers, meta=meta)
@@ -670,6 +804,7 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
 
 def plan_rwkv6(cfg, params: dict, *, sparsity: float | None = None,
                impl: str | None = None, m_hint: int | None = None,
+               decode_m: int | None = None, pack: bool = True,
                tune: str = "off", tune_cache: str | None = None
                ) -> ModelPlan:
     """Offline plan for the RWKV6 projection family (R/K/V/G/O time-mix
@@ -680,9 +815,11 @@ def plan_rwkv6(cfg, params: dict, *, sparsity: float | None = None,
     blocks = params["blocks"]
     cd = jnp.dtype(cfg.compute_dtype)
     m_hint = m_hint or 256
+    decode_m = decode_m or 4
     layers = {nm: _plan_stacked(nm, blocks[nm], sparsity=sparsity, impl=impl,
                                 m_hint=m_hint, cd=cd, tune=tune,
-                                tune_cache=tune_cache)
+                                tune_cache=tune_cache, decode_m=decode_m,
+                                pack=pack)
               for nm in RWKV6_PROJ_NAMES if nm in blocks}
     meta = (("model", cfg.name), ("sparsity", float(sparsity)),
             ("n_layers", int(cfg.n_layers))) + _tune_meta(tune, layers)
@@ -691,6 +828,7 @@ def plan_rwkv6(cfg, params: dict, *, sparsity: float | None = None,
 
 def plan_zamba2(cfg, params: dict, *, sparsity: float | None = None,
                 impl: str | None = None, m_hint: int | None = None,
+                decode_m: int | None = None, pack: bool = True,
                 tune: str = "off", tune_cache: str | None = None
                 ) -> ModelPlan:
     """Offline plan for the Zamba2 Mamba-block in/out projections (z/x in,
@@ -701,9 +839,11 @@ def plan_zamba2(cfg, params: dict, *, sparsity: float | None = None,
     blocks = params["blocks"]
     cd = jnp.dtype(cfg.compute_dtype)
     m_hint = m_hint or 256
+    decode_m = decode_m or 4
     layers = {nm: _plan_stacked(nm, blocks[nm], sparsity=sparsity, impl=impl,
                                 m_hint=m_hint, cd=cd, tune=tune,
-                                tune_cache=tune_cache)
+                                tune_cache=tune_cache, decode_m=decode_m,
+                                pack=pack)
               for nm in ZAMBA2_PROJ_NAMES if nm in blocks}
     meta = (("model", cfg.name), ("sparsity", float(sparsity)),
             ("n_layers", int(cfg.n_layers))) + _tune_meta(tune, layers)
@@ -716,7 +856,10 @@ def plan_model(cfg, params: dict, **kwargs) -> ModelPlan:
     Transformer families (dense/moe/audio/vlm) -> `plan_transformer`;
     ssm -> `plan_rwkv6`; hybrid -> `plan_zamba2`.  Keyword arguments are
     forwarded to the family planner unchanged — in particular ``sparsity``,
-    ``impl``, ``m_hint``, and the measured-autotuning knobs ``tune``
+    ``impl``, ``m_hint``, ``decode_m`` (the decode-step M a second
+    decode-shaped BlockChoice is resolved at — pass the serving batch),
+    ``pack`` (column-combining packing), and the measured-autotuning knobs
+    ``tune``
     (``"off" | "cached" | "sweep"``) and ``tune_cache`` (cache file path);
     ``include_mlp``/``include_experts`` apply to transformer families only
     and are dropped for the recurrent planners.
@@ -773,12 +916,17 @@ def _layer_weight_specs(lp: LayerPlan, mesh):
     if isinstance(w, TiledBalanced):
         lead = w.values.ndim - 3
         vplan = lead_plan(lead) + [fsdp, None, None]
+        perm_spec = None
+        if w.perm is not None:
+            # every device permutes the full input row: replicated
+            perm_spec = shd.logical_spec(
+                mesh, w.perm.shape, lead_plan(w.perm.ndim - 1) + [None])
         return TiledBalanced(
             shd.logical_spec(mesh, w.values.shape, vplan),
             shd.logical_spec(mesh, w.indices.shape, vplan),
             shd.logical_spec(mesh, w.counts.shape,
                              lead_plan(lead) + [fsdp, None]),
-            n_in=w.n_in, bn=w.bn)
+            n_in=w.n_in, bn=w.bn, perm=perm_spec)
     if isinstance(w, BalancedSparse):
         lead = w.values.ndim - 2
         vplan = lead_plan(lead) + [fsdp, None]

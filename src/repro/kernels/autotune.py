@@ -181,7 +181,15 @@ def candidate_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
                      max_candidates: int = 8) -> list:
     """The static `choose_blocks` pick (always first) plus its one-step
     power-of-two neighbors per dimension, filtered to the double-buffered
-    VMEM budget and to sizes that do not exceed the padded problem dims."""
+    VMEM budget and to sizes that do not exceed the padded problem dims.
+
+    Decode-shaped problems (m <= `ops.SKINNY_M`) additionally grow
+    ``bo``-heavy candidates (bo x2, x4): the skinny kernel has no M grid
+    axis, its whole activation block stays resident, so the freed VMEM is
+    best spent widening the output tile.  `cache_key` includes m, so
+    decode shapes sweep and cache separately from prefill shapes — a plan
+    resolving both gets an entry for each.
+    """
     static = ops.choose_blocks(m, o, n, k, itemsize=itemsize,
                                vmem_budget=vmem_budget)
     caps = {"bm": max(8, ops._round_up(m, 8)),
@@ -212,6 +220,10 @@ def candidate_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
             trial = dict(base)
             trial[dim] = cand
             add(trial["bm"], trial["bo"], trial["bn"])
+    if m <= ops.SKINNY_M:
+        for cand in (base["bo"] * 2, base["bo"] * 4):
+            if 8 <= cand <= min(256, caps["bo"]):
+                add(base["bm"], cand, base["bn"])
     return out
 
 

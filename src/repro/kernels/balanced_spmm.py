@@ -79,3 +79,103 @@ def tiled_balanced_spmm_pallas(x: Array, tb: TiledBalanced, *, bm: int = 128,
         out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
         interpret=interpret,
     )(x, tb.values, tb.indices)
+
+
+def _kernel_skinny(x_ref, v_ref, i_ref, o_ref):
+    """One (o, nb) step for decode-shaped M: the whole (padded, <= 8-row)
+    activation block stays resident across the grid — no M axis, no x
+    re-tiling per step, and the [bm, bo] accumulator costs almost nothing."""
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                              # [m, bn]
+    vals = v_ref[...].reshape(v_ref.shape[0], v_ref.shape[2])   # [bo, KB]
+    idx = i_ref[...].reshape(i_ref.shape[0], i_ref.shape[2])    # [bo, KB]
+    bn = x.shape[1]
+    bo = vals.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 0)
+    w_tile = jnp.zeros((bo, bn), jnp.float32).at[rows, idx].add(
+        vals.astype(jnp.float32))
+    o_ref[...] += jnp.dot(x, w_tile.T, preferred_element_type=jnp.float32)
+
+
+def tiled_balanced_spmm_skinny_pallas(x: Array, tb: TiledBalanced, *,
+                                      bo: int = 128,
+                                      interpret: bool = True) -> Array:
+    """Decode-specialized variant of `tiled_balanced_spmm_pallas` for skinny
+    M (a decode step's whole batch, padded to the 8-row sublane).  Grid
+    ``(O/bo, NB)`` — bm is pinned to the decode shape, so the skinny M never
+    pays a full [128, bn] x-tile load per step.
+    """
+    m, n = x.shape
+    o, nb, kb = tb.values.shape
+    bn = tb.bn
+    assert n == nb * bn and o % bo == 0 and m <= 8, (x.shape, tb.values.shape, bo, bn)
+    grid = (o // bo, nb)
+    return pl.pallas_call(
+        _kernel_skinny,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, bn), lambda j, b: (0, b)),          # x col-block
+            pl.BlockSpec((bo, 1, kb), lambda j, b: (j, b, 0)),   # values
+            pl.BlockSpec((bo, 1, kb), lambda j, b: (j, b, 0)),   # local idx
+        ],
+        out_specs=pl.BlockSpec((m, bo), lambda j, b: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+        interpret=interpret,
+    )(x, tb.values, tb.indices)
+
+
+def _kernel_batched(x_ref, v_ref, i_ref, o_ref):
+    """One (e, m, o, nb) step of the fused expert grid: identical math to
+    `_kernel` on the expert's slice — the expert axis is a grid dimension,
+    not a host-level scan, so all experts trace/compile once and XLA
+    pipelines their steps back-to-back."""
+    nb = pl.program_id(3)
+
+    @pl.when(nb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].reshape(x_ref.shape[1], x_ref.shape[2])      # [bm, bn]
+    vals = v_ref[...].reshape(v_ref.shape[1], v_ref.shape[3])   # [bo, KB]
+    idx = i_ref[...].reshape(i_ref.shape[1], i_ref.shape[3])    # [bo, KB]
+    bn = x.shape[1]
+    bo = vals.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 0)
+    w_tile = jnp.zeros((bo, bn), jnp.float32).at[rows, idx].add(
+        vals.astype(jnp.float32))
+    acc = jnp.dot(x, w_tile.T, preferred_element_type=jnp.float32)
+    o_ref[...] += acc[None]
+
+
+def tiled_balanced_spmm_batched_pallas(x: Array, values: Array,
+                                       indices: Array, *, bn: int,
+                                       bm: int = 128, bo: int = 128,
+                                       interpret: bool = True) -> Array:
+    """Fused batched (per-expert) tiled matmul: one grid over all experts.
+
+    x: [E, M, NB*bn]; values/indices: [E, O, NB, KB] with M % bm == 0 and
+    O % bo == 0.  Grid ``(E, M/bm, O/bo, NB)`` replaces the per-expert
+    `lax.scan` dispatch (one kernel launch and one trace for the whole MoE
+    layer).  Returns f32 [E, M, O].
+    """
+    e, m, n = x.shape
+    _, o, nb, kb = values.shape
+    assert n == nb * bn and m % bm == 0 and o % bo == 0, (x.shape, values.shape, bm, bo, bn)
+    grid = (e, m // bm, o // bo, nb)
+    return pl.pallas_call(
+        _kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda g, i, j, b: (g, i, b)),
+            pl.BlockSpec((1, bo, 1, kb), lambda g, i, j, b: (g, j, b, 0)),
+            pl.BlockSpec((1, bo, 1, kb), lambda g, i, j, b: (g, j, b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bo), lambda g, i, j, b: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m, o), jnp.float32),
+        interpret=interpret,
+    )(x, values, indices)

@@ -23,6 +23,19 @@ measures the slack).  The kernel scatter-decodes one ``[bo, bn]`` dense tile
 per grid step and feeds the MXU a rank-2 ``[bm, bn] x [bn, bo]`` product;
 padded entries carry value 0 and index 0, so the decode needs no count
 masking at runtime (``counts`` is for diagnostics and storage accounting).
+
+**Column-combining packing** (Kung et al., arXiv 1811.04770; the SPOTS
+packing move for systolic GEMM): ``KB`` is a *max* over every (row, block)
+pair, so one unlucky block sets the padding for the whole matrix.
+`pack_columns` computes an input-column permutation that spreads heavily
+co-occurring columns across blocks, lowering that max — near-empty sparse
+columns merge into denser tiles, so the same NZEs fit a smaller KB and the
+VMEM freed lets `ops.choose_blocks`/autotune keep larger (bn, bo) tiles.
+A packed encoding stores the permutation in ``TiledBalanced.perm``
+(packed column position -> original padded column, length ``NB * bn``);
+the matmul wrapper permutes ``x`` into packed space before the kernel and
+the output needs no unpermutation (only input columns move).  Packing is
+numerics-preserving: `tiled_to_dense` / `tiled_to_flat` invert it exactly.
 """
 from __future__ import annotations
 
@@ -50,6 +63,11 @@ class TiledBalanced:
     counts: Array    # [O, NB] int32, true NZE per block
     n_in: int        # dense input dimension (NB * bn >= n_in)
     bn: int          # column-block width
+    # Optional column-combining permutation (see module docstring):
+    # perm[p] = original padded column feeding packed position p, length
+    # NB * bn.  Stacked plans broadcast it over lead axes ([L, NB*bn],
+    # [L, E, NB*bn]) so per-layer pytree slicing stays shape-consistent.
+    perm: Array | None = None
 
     @property
     def n_out(self) -> int:
@@ -72,11 +90,17 @@ class TiledBalanced:
         return tiled_to_dense(self)
 
     def tree_flatten(self):
-        return (self.values, self.indices, self.counts), (self.n_in, self.bn)
+        # perm rides as a child (leaf), not aux data: hashing a few thousand
+        # ints per treedef comparison would tax every jitted dispatch.  A
+        # None perm stays None through flatten/unflatten (None is an empty
+        # subtree, so unpacked encodings keep their pre-perm treedef).
+        return ((self.values, self.indices, self.counts, self.perm),
+                (self.n_in, self.bn))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], children[2], aux[0], aux[1])
+        return cls(children[0], children[1], children[2], aux[0], aux[1],
+                   perm=children[3])
 
 
 jax.tree_util.register_pytree_node(
@@ -93,6 +117,61 @@ def max_block_count(indices, n_in: int, bn: int) -> int:
     counts = np.zeros((o, nb), np.int64)
     np.add.at(counts, (np.arange(o)[:, None], blk), 1)
     return max(_KB_ROUND, _round_up(int(counts.max()), _KB_ROUND))
+
+
+def pack_columns(pattern, bn: int) -> np.ndarray:
+    """Column-combining permutation for a sparsity pattern (offline pass).
+
+    Greedy first-fit-decreasing balancer: input columns, heaviest first,
+    are assigned to the ``bn``-slot block whose max per-(row, block) count
+    grows the least (ties -> emptiest block), so columns whose nonzeros
+    co-occur on the same output rows land in *different* blocks.  Leftover
+    slots are filled from the padding pool ``[n, NB*bn)``.
+
+    Returns ``perm`` — int32 ``[NB*bn]``, a permutation of the padded
+    column space with ``perm[p]`` = original padded column at packed
+    position ``p``.  Apply to inputs as ``x_packed = x_padded[:, perm]``
+    and remap flat indices as ``invert_perm(perm)[idx]``.  Host-side and
+    deterministic (a plan-build step, not a hot-path op).
+    """
+    mask = np.asarray(pattern) != 0
+    o, n = mask.shape
+    nb = -(-n // bn)
+    npad = nb * bn
+    if nb <= 1:
+        return np.arange(npad, dtype=np.int32)
+    order = np.argsort(-mask.sum(axis=0), kind="stable")
+    block_rows = np.zeros((nb, o), np.int64)   # per-block per-row NZE so far
+    fill = np.zeros(nb, np.int64)              # slots used per block
+    slots: list[list[int]] = [[] for _ in range(nb)]
+    for c in order:
+        col = mask[:, c]
+        newmax = (block_rows + col[None, :]).max(axis=1) if o else fill * 0
+        newmax = np.where(fill < bn, newmax, np.iinfo(np.int64).max)
+        b = int(np.lexsort((fill, newmax))[0])
+        slots[b].append(int(c))
+        block_rows[b] += col
+        fill[b] += 1
+    pad_pool = iter(range(n, npad))
+    perm = np.empty(npad, np.int32)
+    for b, s in enumerate(slots):
+        s = s + [next(pad_pool) for _ in range(bn - len(s))]
+        perm[b * bn:(b + 1) * bn] = s
+    return perm
+
+
+def invert_perm(perm) -> np.ndarray:
+    """Inverse permutation: ``inv[original column] = packed position``."""
+    p = np.asarray(perm)
+    inv = np.empty_like(p)
+    inv[p] = np.arange(p.shape[0], dtype=p.dtype)
+    return inv
+
+
+def _leaf_perm(perm) -> np.ndarray:
+    """Collapse a lead-broadcast perm leaf ([..., NB*bn]) to one row."""
+    p = np.asarray(perm)
+    return p.reshape(-1, p.shape[-1])[0]
 
 
 def encode_tiled(values, indices, n_in: int, *, bn: int,
@@ -157,10 +236,21 @@ def encode_tiled(values, indices, n_in: int, *, bn: int,
 
 
 def tiled_to_dense(tb: TiledBalanced) -> Array:
-    """Densify to ``[O, n_in]`` (reference/inverse of `encode_tiled`)."""
+    """Densify to ``[O, n_in]`` (reference/inverse of `encode_tiled`).
+
+    Packed encodings are unpermuted back to original column order; padded
+    slots map to padding columns >= n_in under ``perm`` by construction,
+    but padded *tile* slots (value 0, local index 0) may scatter a zero
+    onto a real column — harmless for ``.add``.
+    """
     o, nb, kb = tb.values.shape
     rows = jnp.arange(o)[:, None, None]
     cols = jnp.arange(nb)[None, :, None] * tb.bn + tb.indices
+    if tb.perm is not None:
+        perm = tb.perm
+        if perm.ndim > 1:                      # lead-broadcast stacked leaf
+            perm = perm.reshape(-1, perm.shape[-1])[0]
+        cols = jnp.take(perm.astype(jnp.int32), cols)
     dense = jnp.zeros((o, nb * tb.bn), tb.values.dtype)
     dense = dense.at[rows, cols].add(tb.values)
     return dense[:, :tb.n_in]
@@ -187,6 +277,9 @@ def tiled_to_flat(tb: TiledBalanced):
     k = int(totals[0]) if o else 0
     valid = np.arange(kb)[None, None, :] < cnt[:, :, None]     # [O, NB, KB]
     gcols = np.arange(nb)[None, :, None] * tb.bn + idx         # global cols
+    if tb.perm is not None:
+        # unpermute packed positions back to original padded columns
+        gcols = _leaf_perm(tb.perm)[gcols]
     # valid slots first, preserving (block, slot) order — which is ascending
     # column order for encode_tiled output
     order = np.argsort(~valid.reshape(o, -1), axis=1, kind="stable")[:, :k]
@@ -194,6 +287,13 @@ def tiled_to_flat(tb: TiledBalanced):
                                   axis=1).astype(np.int32)
     flat_vals = jnp.take_along_axis(tb.values.reshape(o, -1),
                                     jnp.asarray(order), axis=1)
+    if tb.perm is not None:
+        # packed block order is not ascending in original columns; the flat
+        # consumers (searchsorted densify, gather paths) require ascending
+        # rows — restore the invariant
+        asc = np.argsort(flat_idx, axis=1, kind="stable")
+        flat_idx = np.take_along_axis(flat_idx, asc, axis=1)
+        flat_vals = jnp.take_along_axis(flat_vals, jnp.asarray(asc), axis=1)
     return flat_vals, jnp.asarray(flat_idx)
 
 

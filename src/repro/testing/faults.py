@@ -213,8 +213,13 @@ def force_impl_failure(*impls: str,
     produce.  ``when(ctx)`` narrows the trip (e.g. only ``bm`` above a
     bound, to exercise the halved-blocks retry).  Restores the previous
     arming on exit.
+
+    Sites ``xla_decode`` / ``pallas_decode`` trip only the skinny-M decode
+    branches inside their parent impls (the parent site still trips the
+    whole impl); batched (fused-expert) dispatches pass ``batched=True``
+    in ctx so ``when`` can target them.
     """
-    valid = ("pallas", "xla", "xla_gather")
+    valid = ("pallas", "xla", "xla_gather", "xla_decode", "pallas_decode")
     for impl in impls:
         if impl not in valid:
             raise ValueError(f"no fault site for impl {impl!r} "

@@ -1,0 +1,320 @@
+"""Decode-specialized serving paths: skinny-M kernel routing (parity +
+VJP at m in {1, 2, 4, 8}), column-combining packed plans, fused batched
+expert dispatch vs the per-expert scan it replaced, the guard's dual-shape
+(prefill + decode) probing, the execute-layer decode_dispatch stat, and
+the serve_bench --compare regression comparator."""
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pruning import balanced_prune_rows, to_balanced_sparse
+from repro.engine import execute as engine_execute
+from repro.engine import guard as engine_guard
+from repro.engine import plan as engine_plan
+from repro.kernels import ops, ref
+from repro.kernels.tile_format import TiledBalanced, encode_tiled, \
+    max_block_count
+from repro.testing import faults
+
+IMPLS = ("xla", "xla_gather", "pallas")
+
+
+def _problem(m, n, o, k, seed=0):
+    kx, kw = jax.random.split(jax.random.key(seed))
+    x = jax.random.normal(kx, (m, n), jnp.float32)
+    w = jax.random.normal(kw, (o, n), jnp.float32)
+    sp = to_balanced_sparse(w, k=k)
+    return x, sp
+
+
+# ---------------------------------------------------------------------------
+# Skinny-M routing: parity + VJP across every impl
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 2, 4, 8])
+@pytest.mark.parametrize("impl", IMPLS)
+def test_skinny_m_parity(m, impl):
+    x, sp = _problem(m, 96, 48, 24, seed=m)
+    got = ops.balanced_spmm(x, sp.values, sp.indices, n_in=96, impl=impl)
+    want = x @ ref.balanced_dense(sp.values, sp.indices, 96).T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m", [1, 4, 8])
+@pytest.mark.parametrize("impl", IMPLS)
+def test_skinny_m_vjp_matches_dense_reference(m, impl):
+    x, sp = _problem(m, 96, 48, 24, seed=10 + m)
+
+    def loss(xx, vv):
+        return jnp.sum(jnp.sin(ops.balanced_spmm(
+            xx, vv, sp.indices, n_in=96, impl=impl)))
+
+    def loss_ref(xx, vv):
+        return jnp.sum(jnp.sin(xx @ ref.balanced_dense(
+            vv, sp.indices, 96).T))
+
+    dx, dv = jax.grad(loss, argnums=(0, 1))(x, sp.values)
+    dx_r, dv_r = jax.grad(loss_ref, argnums=(0, 1))(x, sp.values)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_r),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(dv_r),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_skinny_and_wide_agree_per_impl():
+    """The m-routing must be invisible numerically: the first SKINNY_M rows
+    of a wide dispatch equal a skinny dispatch of those rows."""
+    x, sp = _problem(32, 96, 48, 24, seed=3)
+    for impl in IMPLS:
+        wide = ops.balanced_spmm(x, sp.values, sp.indices, n_in=96,
+                                 impl=impl)
+        skinny = ops.balanced_spmm(x[:ops.SKINNY_M], sp.values, sp.indices,
+                                   n_in=96, impl=impl)
+        np.testing.assert_allclose(np.asarray(wide[:ops.SKINNY_M]),
+                                   np.asarray(skinny), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Packed (column-combined) plans through the engine
+# ---------------------------------------------------------------------------
+
+def _skewed_fc(o=48, n=512, k=64, seed=5):
+    """A pattern column-combining provably helps: every row's nonzeros
+    live in the first n//2 columns, so half the column blocks are empty
+    until packing spreads them."""
+    rng = np.random.default_rng(seed)
+    mask = np.zeros((o, n), np.float32)
+    for r in range(o):
+        mask[r, rng.choice(n // 2, size=k, replace=False)] = 1.0
+    w = jnp.asarray(rng.standard_normal((o, n), np.float32))
+    return w, jnp.asarray(mask)
+
+
+@pytest.mark.parametrize("m", [4, 32])
+def test_packed_plan_parity_and_grads(m):
+    w, mask = _skewed_fc()
+    lp = engine_plan.build_layer_plan("fc", w, mask=mask, impl="pallas",
+                                     m_hint=32, pack=True)
+    assert lp.spec.packed and lp.weights.perm is not None
+    assert lp.spec.pack_kb[1] < lp.spec.pack_kb[0]
+    x = jax.random.normal(jax.random.key(7), (m, 512), jnp.float32)
+    want = x @ (w * mask).T
+    got = engine_execute.apply_fc(x, lp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    dx = jax.grad(lambda xx: jnp.sum(jnp.sin(
+        engine_execute.apply_fc(xx, lp))))(x)
+    dx_r = jax.grad(lambda xx: jnp.sum(jnp.sin(xx @ (w * mask).T)))(x)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_packed_plan_demotes_to_flat_in_original_order():
+    """Demotion decodes a packed encoding back to flat format in original
+    column order (ascending indices — the flat-format invariant)."""
+    w, mask = _skewed_fc(seed=6)
+    lp = engine_plan.build_layer_plan("fc", w, mask=mask, impl="pallas",
+                                      m_hint=32, pack=True)
+    assert lp.spec.packed
+    lp2 = engine_execute.demote_layer(lp, to_impl="xla")
+    assert not lp2.spec.packed
+    idx = np.asarray(lp2.weights.indices)
+    assert (np.diff(idx, axis=1) > 0).all()
+    x = jax.random.normal(jax.random.key(8), (5, 512), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(engine_execute.apply_fc(x, lp2)),
+        np.asarray(x @ (w * mask).T), rtol=1e-4, atol=1e-4)
+
+
+def test_pack_rejected_when_it_cannot_shrink_kb():
+    """A pattern already at uniform per-block density packs to the same KB;
+    the plan must keep the unpacked encoding (no perm, packed=False)."""
+    w = jax.random.normal(jax.random.key(9), (32, 256))
+    _, mask = balanced_prune_rows(w, 0.5)
+    lp = engine_plan.build_layer_plan("fc", w, mask=mask, impl="pallas",
+                                      m_hint=32, pack=True)
+    if not lp.spec.packed:
+        assert lp.weights.perm is None and lp.spec.pack_kb == ()
+
+
+# ---------------------------------------------------------------------------
+# Fused batched expert dispatch vs the per-expert scan it replaced
+# ---------------------------------------------------------------------------
+
+def _expert_problem(e=3, c=4, n=96, o=48, k=24, seed=11):
+    kx, kw = jax.random.split(jax.random.key(seed))
+    x = jax.random.normal(kx, (e, c, n), jnp.float32)
+    vals, idxs = [], []
+    for i in range(e):
+        sp = to_balanced_sparse(
+            jax.random.normal(jax.random.fold_in(kw, i), (o, n)), k=k)
+        vals.append(sp.values)
+        idxs.append(sp.indices)
+    return x, jnp.stack(vals), jnp.stack(idxs)
+
+
+@pytest.mark.parametrize("impl", ["xla", "xla_gather"])
+@pytest.mark.parametrize("c", [4, 16])
+def test_batched_flat_matches_scan(impl, c):
+    x, vals, idx = _expert_problem(c=c)
+    got = ops.balanced_spmm_batched(x, vals, idx, n_in=96, impl=impl)
+    want = jnp.stack([ops.balanced_spmm(x[i], vals[i], idx[i], n_in=96,
+                                        impl=impl)
+                      for i in range(x.shape[0])])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batched_flat_grads_match_scan():
+    x, vals, idx = _expert_problem(seed=12)
+
+    def loss_b(xx, vv):
+        return jnp.sum(jnp.sin(ops.balanced_spmm_batched(
+            xx, vv, idx, n_in=96, impl="xla")))
+
+    def loss_s(xx, vv):
+        ys = [ops.balanced_spmm(xx[i], vv[i], idx[i], n_in=96, impl="xla")
+              for i in range(xx.shape[0])]
+        return jnp.sum(jnp.sin(jnp.stack(ys)))
+
+    db = jax.grad(loss_b, argnums=(0, 1))(x, vals)
+    ds = jax.grad(loss_s, argnums=(0, 1))(x, vals)
+    for g, r in zip(db, ds):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("c", [4, 16])
+def test_batched_tiled_matches_per_expert_tiled(c):
+    x, vals, idx = _expert_problem(c=c, seed=13)
+    e, _, n = x.shape
+    bn = 32
+    kb = max(max_block_count(idx[i], n, bn) for i in range(e))
+    tbs = [encode_tiled(vals[i], idx[i], n, bn=bn, kb=kb) for i in range(e)]
+    tb = TiledBalanced(jnp.stack([t.values for t in tbs]),
+                       jnp.stack([t.indices for t in tbs]),
+                       jnp.stack([t.counts for t in tbs]), n_in=n, bn=bn)
+    got = ops.tiled_spmm_batched(x, tb)
+    want = jnp.stack([ops.tiled_spmm(x[i], tbs[i])
+                      for i in range(e)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # dx grad parity with the per-expert path
+    db = jax.grad(lambda xx: jnp.sum(jnp.sin(
+        ops.tiled_spmm_batched(xx, tb))))(x)
+    ds = jax.grad(lambda xx: jnp.sum(jnp.sin(jnp.stack(
+        [ops.tiled_spmm(xx[i], tbs[i]) for i in range(e)]))))(x)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(ds),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_expert_fc_has_no_scan_in_jaxpr():
+    """The fused dispatch contract: no `scan` primitive left in the expert
+    apply's jaxpr (the per-expert loop is what cost the 0.10x decode)."""
+    w = jax.random.normal(jax.random.key(14), (3, 96, 48))
+    lp = engine_plan._plan_stacked("experts", w, sparsity=0.5, impl="xla",
+                                   m_hint=16, cd=np.dtype(np.float32))
+    x = jax.random.normal(jax.random.key(15), (3, 4, 96))
+    jaxpr = jax.make_jaxpr(
+        lambda xx: engine_execute.apply_expert_fc(xx, lp))(x)
+    assert "scan" not in str(jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# Guard: dual-shape probing
+# ---------------------------------------------------------------------------
+
+def _xla_fc_plan():
+    w = jax.random.normal(jax.random.key(16), (48, 96))
+    _, mask = balanced_prune_rows(w, 0.5)
+    return engine_plan.build_layer_plan("fc", w, mask=mask, impl="xla",
+                                        m_hint=32)
+
+
+def test_probe_layer_covers_decode_shape():
+    lp = _xla_fc_plan()
+    diff, err = engine_guard.probe_layer(lp)
+    assert err is None
+    # a decode-only fault is invisible at the prefill shape but MUST fail
+    # the probe: serving runs the decode branch every generated token
+    with faults.force_impl_failure("xla_decode"):
+        _, err = engine_guard.probe_layer(lp)
+    assert err is not None and err.startswith("m=")
+
+
+def test_harden_demotes_on_decode_only_failure():
+    lp = _xla_fc_plan()
+    plan = engine_plan.ModelPlan(layers={"fc": lp}, meta=())
+    with faults.force_impl_failure("xla_decode"):
+        hardened, events = engine_guard.harden_plan(plan)
+    assert [e.action for e in events] == ["demoted"]
+    assert hardened.layers["fc"].spec.impl == "xla_gather"
+    assert hardened.layers["fc"].spec.degraded_from == "xla"
+
+
+def test_validate_plan_flags_packed_spec_without_perm():
+    w, mask = _skewed_fc(seed=17)
+    lp = engine_plan.build_layer_plan("fc", w, mask=mask, impl="pallas",
+                                      m_hint=32, pack=True)
+    assert lp.spec.packed
+    import dataclasses as _dc
+    broken = engine_plan.LayerPlan(
+        spec=lp.spec, weights=_dc.replace(lp.weights, perm=None))
+    report = engine_guard.validate_plan(
+        engine_plan.ModelPlan(layers={"fc": broken}, meta=()), strict=False)
+    assert not report.ok
+    assert any(v.check == "perm" for v in report.violations())
+
+
+# ---------------------------------------------------------------------------
+# Execute: decode_dispatch stat
+# ---------------------------------------------------------------------------
+
+def test_decode_dispatch_stat_ticks_only_on_skinny():
+    lp = _xla_fc_plan()
+    engine_execute.reset_stats()
+    engine_execute.apply_fc(jnp.ones((4, 96)), lp)
+    assert engine_execute.stats().get("decode_dispatch") == 1
+    engine_execute.reset_stats()
+    engine_execute.apply_fc(jnp.ones((32, 96)), lp)
+    assert engine_execute.stats().get("decode_dispatch", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# serve_bench --compare comparator
+# ---------------------------------------------------------------------------
+
+def _load_serve_bench():
+    path = (pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+            / "serve_bench.py")
+    spec = importlib.util.spec_from_file_location("serve_bench_cmp", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_compare_reports_flags_only_real_regressions():
+    sb = _load_serve_bench()
+    committed = {"archs": {
+        "a": {"speedup_sparse_vs_dense_prefill": 1.00,
+              "speedup_sparse_vs_dense_decode": 1.50},
+        "b": {"speedup_sparse_vs_dense_prefill": 0.50,
+              "speedup_sparse_vs_dense_decode": 0.30},
+        "gone": {"speedup_sparse_vs_dense_decode": 9.9},
+    }}
+    fresh = {"archs": {
+        # within 5% tolerance + an improvement: no flags
+        "a": {"speedup_sparse_vs_dense_prefill": 0.97,
+              "speedup_sparse_vs_dense_decode": 1.80},
+        # decode collapsed: flagged; prefill improved: not flagged
+        "b": {"speedup_sparse_vs_dense_prefill": 0.60,
+              "speedup_sparse_vs_dense_decode": 0.10},
+    }}
+    regs = sb.compare_reports(fresh, committed)
+    assert len(regs) == 1 and "b decode" in regs[0]
+    assert sb.compare_reports(committed, committed) == []

@@ -227,3 +227,50 @@ def test_choose_dataflow_picks_min(si, sw):
                       c_o=512, h_k=3, w_k=3, ifm_sparsity=si, w_sparsity=sw)
     ch = choose_dataflow(layer)
     assert ch.d_mem_bits == min(ch.d_mem_rif, ch.d_mem_rwf)
+
+
+# ---------------------------------------------------------------------------
+# column-combining packing invariants
+# ---------------------------------------------------------------------------
+
+from repro.kernels.tile_format import (TiledBalanced, encode_tiled,  # noqa: E402
+                                       invert_perm, max_block_count,
+                                       pack_columns, tiled_to_dense,
+                                       tiled_to_flat)
+
+
+@given(st.integers(2, 10), st.integers(9, 40), st.integers(1, 6),
+       st.integers(0, 2 ** 31 - 1))
+def test_pack_columns_roundtrip(o, n, k, seed):
+    """pack_columns yields a bijection of the padded column space, and a
+    packed encoding round-trips exactly: densify unpermutes to the original
+    layout, flatten restores ascending original indices."""
+    bn = 8
+    k = min(k, n)
+    w = jnp.asarray(np.random.default_rng(seed).standard_normal((o, n)))
+    sp = to_balanced_sparse(w, k=k)
+    idx = np.asarray(sp.indices)
+    mask = np.zeros((o, n), bool)
+    np.put_along_axis(mask, idx, True, axis=1)
+    perm = pack_columns(mask, bn)
+    npad = perm.shape[0]
+    assert npad % bn == 0 and npad >= n
+    assert np.array_equal(np.sort(perm), np.arange(npad))
+    # packed encode: remap indices into packed space, re-sort ascending
+    inv = invert_perm(perm)
+    pidx = inv[idx]
+    order = np.argsort(pidx, axis=1, kind="stable")
+    pidx = np.take_along_axis(pidx, order, axis=1).astype(np.int32)
+    pvals = jnp.take_along_axis(sp.values, jnp.asarray(order), axis=1)
+    kb = max_block_count(pidx, npad, bn)
+    tb0 = encode_tiled(pvals, pidx, npad, bn=bn, kb=kb)
+    tb = TiledBalanced(tb0.values, tb0.indices, tb0.counts, n_in=n, bn=bn,
+                       perm=jnp.asarray(perm))
+    np.testing.assert_allclose(np.asarray(tiled_to_dense(tb)),
+                               np.asarray(sp.to_dense()), atol=0)
+    fvals, fidx = tiled_to_flat(tb)
+    fidx = np.asarray(fidx)
+    assert (np.diff(fidx, axis=1) > 0).all()
+    np.testing.assert_array_equal(fidx, idx)
+    np.testing.assert_allclose(np.asarray(fvals), np.asarray(sp.values),
+                               atol=0)
