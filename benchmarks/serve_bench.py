@@ -16,6 +16,15 @@ full configs unchanged.  Each cell asserts sparse-vs-masked-dense logits
 parity and that the balanced kernels actually dispatched (engine stats)
 before any timing is trusted.
 
+A ``traffic`` section (unless ``--no-traffic``) additionally A/Bs the
+continuous-batching serving runtime (`repro.serving`, DESIGN.md §12)
+against the static batch loop at equal load on a seeded Poisson scenario,
+through the same `launch.serve.traffic_mode` the CLI ships.  That cell IS
+gated: paged-vs-contiguous logits parity must be exactly 0.0 and the
+continuous runtime must beat the static loop on sustained tok/s and p50
+latency — both sides run the same kernels, so the A/B is
+machine-independent in sign.
+
 Writes ``BENCH_serve.json`` at the repo root: the serving perf trajectory
 later PRs must beat (see DESIGN.md §6 for the schema and contract).
 ``--smoke`` is the CI regression gate (registered as a slow-marked pytest,
@@ -44,10 +53,18 @@ from repro.configs import get_smoke                           # noqa: E402
 from repro.engine import execute as engine_execute            # noqa: E402
 from repro.engine import plan as engine_plan                  # noqa: E402
 from repro.kernels.autotune import bench_time as _timed       # noqa: E402
-from repro.launch.serve import _parity_check                  # noqa: E402
+from repro.launch.serve import _parity_check, traffic_mode    # noqa: E402
 from repro.models import build_model                          # noqa: E402
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# the committed continuous-vs-static traffic scenario (see launch/serve.py
+# traffic_mode): saturating arrivals so the A/B is a throughput race, the
+# regime where continuous batching's slot recycling pays.  Small enough
+# for the CI slow job, large enough that the win is outside timer noise.
+TRAFFIC_SCENARIO = dict(requests=24, rate=200.0, prompt_len=12,
+                        gen_steps=24, page_size=4, slots=8,
+                        prefill_chunk=4, seed=0)
 
 # family coverage: dense transformer, MoE (per-expert path), RWKV6
 # (recurrent), Zamba2 (hybrid).  Smoke keeps the first three (the
@@ -141,6 +158,54 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen_steps: int,
     return cell
 
 
+def bench_traffic(*, sparsity: float, tune: str,
+                  tune_cache: str | None) -> dict:
+    """The ``traffic`` cell: the continuous-batching serving runtime
+    (`repro.serving`) vs the static batch loop at equal load on the
+    transformer arch, through `launch.serve.traffic_mode` — the same code
+    path ``serve --traffic`` ships.  The returned dict carries the
+    paged-vs-contiguous parity diff (gated exact-zero inside traffic_mode)
+    and both sides' p50/p99 latency, TTFT, and sustained tok/s."""
+    cfg = dataclasses.replace(get_smoke("olmo-1b"), sparse_serving=True)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    sc = TRAFFIC_SCENARIO
+    plan = engine_plan.plan_model(
+        cfg, params, sparsity=sparsity,
+        m_hint=sc["slots"] * sc["prompt_len"], decode_m=sc["slots"],
+        tune=tune, tune_cache=tune_cache)
+    args = argparse.Namespace(**sc)
+    cell = traffic_mode(bundle, {**params, "sparse_plan": plan}, cfg, args)
+    cell["arch"] = "olmo-1b"
+    return cell
+
+
+def traffic_gate_failures(cell: dict) -> list:
+    """The traffic cell's pass criteria, as regression strings (empty ==
+    pass): paged-KV logits parity must be *exactly* zero, and the
+    continuous runtime must beat the static loop at equal load on both
+    sustained tok/s and p50 latency.  Unlike the sparse-vs-dense cells
+    (reported, not gated — CPU absolutes are not the TPU story), this A/B
+    compares two schedulers on the *same* kernels and backend, so losing
+    it is a runtime regression on any machine."""
+    fails = []
+    if cell.get("parity_max_abs_diff") != 0.0:
+        fails.append(f"traffic: paged-vs-contiguous parity "
+                     f"{cell.get('parity_max_abs_diff')} != 0.0")
+    cont, stat = cell.get("continuous", {}), cell.get("static", {})
+    c_tps = cont.get("sustained_tok_per_s", 0.0)
+    s_tps = stat.get("sustained_tok_per_s", float("inf"))
+    if not c_tps > s_tps:
+        fails.append(f"traffic: continuous {c_tps:.1f} tok/s does not beat "
+                     f"static {s_tps:.1f} tok/s at equal load")
+    c_p50 = (cont.get("latency_s") or {}).get("p50")
+    s_p50 = (stat.get("latency_s") or {}).get("p50")
+    if c_p50 is None or s_p50 is None or not c_p50 < s_p50:
+        fails.append(f"traffic: continuous p50 latency {c_p50} not below "
+                     f"static {s_p50}")
+    return fails
+
+
 def compare_reports(new: dict, committed: dict, *, tol: float = 0.05) -> list:
     """Regression check against a committed report: every sparse-vs-dense
     speedup cell in ``committed`` must be matched within ``tol`` (5%
@@ -190,6 +255,12 @@ def main(argv=None):
                     help="block-choice policy for the plans under test "
                          "(kernels.autotune; bites on the pallas impl)")
     ap.add_argument("--tune-cache", default=None)
+    ap.add_argument("--traffic", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="run the continuous-vs-static traffic A/B cell "
+                         "(--no-traffic to skip; the cell gates on exact "
+                         "paged-KV parity and on continuous beating the "
+                         "static loop)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -214,6 +285,16 @@ def main(argv=None):
         except Exception as e:  # noqa: BLE001 - report, keep benching
             failures.append(f"{arch}: {type(e).__name__}: {e}")
             print(f"  {arch}: FAILED — {e}")
+    traffic = None
+    if args.traffic:
+        print("traffic (continuous batching vs static loop):")
+        try:
+            traffic = bench_traffic(sparsity=args.sparsity, tune=args.tune,
+                                    tune_cache=args.tune_cache)
+            failures.extend(traffic_gate_failures(traffic))
+        except Exception as e:  # noqa: BLE001 - gate via failures
+            failures.append(f"traffic: {type(e).__name__}: {e}")
+            print(f"  traffic: FAILED — {e}")
     report = {
         "meta": {
             "bench": "end-to-end serving: sparse plan vs masked dense",
@@ -229,6 +310,8 @@ def main(argv=None):
         },
         "archs": results,
     }
+    if traffic is not None:
+        report["traffic"] = traffic
     pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {args.out} ({report['meta']['wall_s']} s)")
 
@@ -244,9 +327,13 @@ def main(argv=None):
     fams = {c["family"] for c in results.values()}
     geo = np.exp(np.mean([np.log(c["speedup_sparse_vs_dense_decode"])
                           for c in results.values()])) if results else 0.0
+    traffic_note = ""
+    if traffic is not None:
+        traffic_note = (f"  traffic: continuous/static sustained = "
+                        f"{traffic['speedup_sustained']:.2f}x;")
     print(f"families covered: {sorted(fams)};  decode speedup geomean "
-          f"(sparse vs masked-dense, this backend): {geo:.2f}x;  "
-          f"gate: {'ok' if ok else 'FAIL'}")
+          f"(sparse vs masked-dense, this backend): {geo:.2f}x;"
+          f"{traffic_note}  gate: {'ok' if ok else 'FAIL'}")
     if failures:
         # a report with recorded failures must never exit 0 — a CI step
         # that archives the JSON and trusts the exit code would otherwise

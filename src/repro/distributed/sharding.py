@@ -132,6 +132,28 @@ def with_channel_sharding(mesh: Mesh, h: jax.Array):
         h, NamedSharding(mesh, P(dp, None, dsp)))
 
 
+def kv_plane_spec(mesh: Mesh, n_planes: int, *, lead_dims: int = 1) -> P:
+    """PartitionSpec for a plane-layout KV cache/pool ``[..., P, S, dh]``.
+
+    The plane axis (``B*KH`` for a contiguous cache, ``num_pages*KH`` for
+    the paged pool — `serving.paged_kv`) is the natural shard dim: planes
+    are independent rows of the indexed decode write, so sharding them
+    over the data axes (then ``model``, when head count still divides)
+    keeps every write and every page-gather partition-local.  Row (S) and
+    ``dh`` dims stay replicated — dynamic per-plane positions make them
+    partition-hostile.  ``lead_dims`` leading axes (the stacked-layer axis
+    of a per-model cache, absent on a per-layer pool) are replicated.
+    """
+    plane = dim_spec(mesh, n_planes, ("data", "pod", "model"), "model")
+    return P(*([None] * lead_dims), plane, None, None)
+
+
+def page_table_spec(mesh: Mesh) -> P:
+    """The page table ``[slots, max_pages]`` is host-authored metadata,
+    tiny, and consulted by every device that gathers a page — replicate."""
+    return P(None, None)
+
+
 def named(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
 

@@ -146,7 +146,12 @@ def apply_fc(x: Array, lp: LayerPlan) -> Array:
     pre-encoded `kernels.ops.tiled_spmm` at the plan's (possibly autotuned)
     ``spec.blocks`` — or ``spec.blocks_decode`` when M is decode-shaped
     (M <= `kernels.ops.SKINNY_M`; static at trace time, so the routing is
-    free and each compiled executable bakes in its shape's blocks);
+    free and each compiled executable bakes in its shape's blocks).
+    ``block_m`` is additionally clamped to the *live* M's power-of-two
+    bucket (`kernels.ops.bucket_m`, 8-row sublane floor): the plan's bm
+    was resolved at ``m_hint``/``decode_m``, but the serving runtime
+    dispatches a spread of batch buckets and chunk widths, and a small
+    live M must not pad up to a stale prefill-sized tile.
     ``xla``/``xla_gather`` run the flat-format `kernels.ops.balanced_spmm`
     fallbacks, which route skinny M internally.
     """
@@ -163,7 +168,8 @@ def apply_fc(x: Array, lp: LayerPlan) -> Array:
     if spec.impl == "pallas":
         blk = spec.blocks_decode if skinny and spec.blocks_decode \
             else spec.blocks
-        return kernel_ops.tiled_spmm(x, lp.weights, block_m=blk.bm,
+        bm = min(blk.bm, max(8, kernel_ops.bucket_m(m)))
+        return kernel_ops.tiled_spmm(x, lp.weights, block_m=bm,
                                      block_o=blk.bo)
     sp = lp.weights
     return kernel_ops.balanced_spmm(x, sp.values, sp.indices, n_in=spec.n_in,
@@ -200,7 +206,9 @@ def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
     if spec.impl == "pallas":
         blk = spec.blocks_decode if skinny and spec.blocks_decode \
             else spec.blocks
-        return kernel_ops.tiled_spmm_batched(x, lp.weights, block_m=blk.bm,
+        # same live-M clamp as apply_fc: m here is per-expert capacity
+        bm = min(blk.bm, max(8, kernel_ops.bucket_m(m)))
+        return kernel_ops.tiled_spmm_batched(x, lp.weights, block_m=bm,
                                              block_o=blk.bo)
     sp = lp.weights
     return kernel_ops.balanced_spmm_batched(x, sp.values, sp.indices,

@@ -557,7 +557,20 @@ def locate_poisoned(plan: ModelPlan, eval_finite: Callable[[ModelPlan], bool],
     return tuple(poisoned), True
 
 
+def nonfinite_rows(logits) -> np.ndarray:
+    """Per-row finiteness mask of a ``[B, vocab]`` logits batch.
+
+    The serving engine's *request*-granular NaN guard: `serving.engine`
+    quarantines exactly the rows flagged here (evict + free pages) and
+    keeps serving the rest of the batch — the per-request complement of
+    the plan-level layer quarantine above, for faults that ride in with
+    one request (poisoned embedding row, corrupt prompt) rather than with
+    a planned layer.
+    """
+    return np.asarray(~jnp.isfinite(jnp.asarray(logits)).all(axis=-1))
+
+
 __all__ = ["GuardError", "PlanValidationError", "Violation", "LayerReport",
            "PlanReport", "Degradation", "validate_layer", "validate_plan",
            "probe_layer", "harden_plan", "quarantine_layers",
-           "locate_poisoned"]
+           "locate_poisoned", "nonfinite_rows"]

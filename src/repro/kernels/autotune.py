@@ -76,8 +76,12 @@ def cache_key(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
               vmem_budget: int = ops._VMEM_BUDGET) -> str:
     """Versioned cache key.  ``backend`` defaults to the live JAX backend —
     entries swept on one backend are invisible on another (a TPU never
-    trusts CPU-interpret timings and vice versa)."""
+    trusts CPU-interpret timings and vice versa).  ``m`` is bucketed to
+    the next power of two (`ops.bucket_m`): the serving runtime's live M
+    spread (batch buckets x chunk widths) must share entries per bucket,
+    not fragment the cache per exact M."""
     backend = backend or jax.default_backend()
+    m = ops.bucket_m(m)
     return (f"v{CACHE_VERSION}|{backend}|{impl}|is{itemsize}"
             f"|m{m}|o{o}|n{n}|k{k}|vmem{vmem_budget}")
 
@@ -188,8 +192,10 @@ def candidate_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
     axis, its whole activation block stays resident, so the freed VMEM is
     best spent widening the output tile.  `cache_key` includes m, so
     decode shapes sweep and cache separately from prefill shapes — a plan
-    resolving both gets an entry for each.
+    resolving both gets an entry for each.  ``m`` is bucketed to its
+    power-of-two bucket first, matching `cache_key`.
     """
+    m = ops.bucket_m(m)
     static = ops.choose_blocks(m, o, n, k, itemsize=itemsize,
                                vmem_budget=vmem_budget)
     caps = {"bm": max(8, ops._round_up(m, 8)),
@@ -268,8 +274,11 @@ def sweep_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
     `ops.tiled_spmm` — the exact function `engine/execute.apply_fc`
     dispatches for planned pallas layers.  ``record`` carries every
     candidate's time plus the static pick's, ready to persist as a cache
-    entry.  Non-tunable impls return the static model untimed.
+    entry.  Non-tunable impls return the static model untimed.  ``m`` is
+    bucketed first, so the synthetic problem is the exact shape the cache
+    entry's key names.
     """
+    m = ops.bucket_m(m)
     static = ops.choose_blocks(m, o, n, k, itemsize=itemsize,
                                vmem_budget=vmem_budget)
     base = {"backend": jax.default_backend(), "impl": impl,
@@ -373,9 +382,13 @@ def resolve_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
                         persists the winner before returning it.
 
     Non-tunable impls (everything but "pallas") always resolve static.
+    ``m`` is bucketed to its power-of-two bucket (`ops.bucket_m`) before
+    anything else — the static model, the cache key, and the sweep all see
+    the bucketed M, so two live shapes in one bucket resolve identically.
     """
     if tune not in ("off", "cached", "sweep"):
         raise ValueError(f"tune must be off|cached|sweep, got {tune!r}")
+    m = ops.bucket_m(m)
     static = ops.choose_blocks(m, o, n, k, itemsize=itemsize,
                                vmem_budget=vmem_budget)
     if tune == "off" or impl not in TUNABLE_IMPLS:
@@ -422,8 +435,10 @@ def main(argv=None):  # pragma: no cover - thin CLI
     return 0
 
 
+bucket_m = ops.bucket_m          # re-export: callers keying sweeps by hand
+
 __all__ = ["CACHE_VERSION", "TUNABLE_IMPLS", "Resolved", "bench_time",
-           "cache_key", "candidate_blocks", "default_cache_path",
+           "bucket_m", "cache_key", "candidate_blocks", "default_cache_path",
            "load_cache", "resolve_blocks", "save_cache", "sweep_blocks",
            "update_cache"]
 

@@ -63,6 +63,16 @@ _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 SKINNY_M = 8
 
 
+def bucket_m(m: int) -> int:
+    """Next power of two at or above ``m`` (minimum 1): the M-bucket a
+    live GEMM shape belongs to.  The serving runtime produces a spread of
+    decode/chunked-prefill M values (batch buckets x chunk widths);
+    bucketing collapses them so autotune cache keys, sweeps, and the
+    ``block_m`` an executable bakes in are shared per bucket instead of
+    fragmenting per exact M.  Idempotent on powers of two."""
+    return 1 << max(int(m) - 1, 0).bit_length()
+
+
 class InjectedKernelFault(RuntimeError):
     """Raised by an armed fault-injection site (`repro.testing.faults`)."""
 
@@ -686,4 +696,4 @@ def encode_bitmap(w: Array, *, bn: int = 128, k: int | None = None):
 __all__ = ["balanced_spmm", "balanced_spmm_batched", "tiled_spmm",
            "tiled_spmm_batched", "bitmap_spmm", "encode_bitmap",
            "choose_blocks", "BlockChoice", "halve_blocks",
-           "InjectedKernelFault", "SKINNY_M"]
+           "InjectedKernelFault", "SKINNY_M", "bucket_m"]

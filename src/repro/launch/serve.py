@@ -43,23 +43,26 @@ def greedy_generate(bundle, params, prompt, steps: int, max_len: int, *,
                     prefill_fn=None, decode_fn=None):
     """Greedy decode; pass prejitted fns to keep compile out of timed runs.
 
-    ``max_len`` must cover the prompt plus every generated position with a
-    slot to spare: the decode cache writes at position ``cache_len`` via a
-    scatter, and an out-of-range scatter index *clamps silently* under
-    XLA's default semantics — tokens past the cache end would quietly
-    overwrite the last slot instead of erroring.  Guard it here, loudly.
+    ``max_len`` must cover every KV slot actually written: prompt rows
+    0..p-1 plus one row per decode step (step i writes at ``p + i``), so
+    the bound is ``prompt_len + steps <= max_len`` — the final sampled
+    token is never fed back and needs no slot.  Past it, the decode cache
+    write's out-of-range scatter index *clamps silently* under XLA's
+    default semantics — tokens past the cache end would quietly overwrite
+    the last slot instead of erroring.  Guard it here, loudly.
     """
-    if prompt.shape[1] + steps + 1 > max_len:
+    if prompt.shape[1] + steps > max_len:
         raise ValueError(
             f"KV cache overrun: prompt_len={prompt.shape[1]} + "
-            f"steps={steps} + 1 > max_len={max_len} — decode would scatter "
+            f"steps={steps} > max_len={max_len} — decode would scatter "
             "past the cache end (silently clamped, corrupting the last "
             "slot); raise max_len or shorten the generation")
     prefill_fn = prefill_fn or jax.jit(bundle.prefill)
     decode_fn = decode_fn or jax.jit(bundle.decode_step)
     b = prompt.shape[0]
-    cache = bundle.init_cache(b, max_len)
-    logits, _ = prefill_fn(params, {"tokens": prompt})
+    from ..models.api import merge_prefill_cache
+    logits, pf_cache = prefill_fn(params, {"tokens": prompt})
+    cache = merge_prefill_cache(bundle.init_cache(b, max_len), pf_cache)
     toks = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out = [toks]
     clen = jnp.full((b,), prompt.shape[1], jnp.int32)
@@ -105,10 +108,12 @@ def guarded_generate(bundle, plan, params, prompt, steps: int, max_len: int,
         # so a NaN q/k projection only surfaces through decode_attention's
         # plain softmax
         p = {**params, "sparse_plan": cand_plan}
-        lg, _ = prefill_fn(p, {"tokens": prompt})
+        lg, pfc = prefill_fn(p, {"tokens": prompt})
         if not bool(jnp.isfinite(lg).all()):
             return False
-        cache = bundle.init_cache(prompt.shape[0], max_len)
+        from ..models.api import merge_prefill_cache
+        cache = merge_prefill_cache(
+            bundle.init_cache(prompt.shape[0], max_len), pfc)
         toks = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
         clen = jnp.full((prompt.shape[0],), prompt.shape[1], jnp.int32)
         lg2, _ = decode_fn(p, {"tokens": toks, "cache_len": clen}, cache)
@@ -157,6 +162,115 @@ def guarded_generate(bundle, plan, params, prompt, steps: int, max_len: int,
         "guarded serving did not stabilize after 4 quarantine rounds")
 
 
+def traffic_mode(bundle, serve_params, cfg, args) -> dict:
+    """``--traffic``: the continuous-batching runtime under a seeded
+    Poisson arrival scenario, A/B'd against the static batch loop at
+    equal load, plus the paged-vs-contiguous bitwise parity gate.
+
+    Returns the report dict committed as BENCH_serve.json's ``traffic``
+    section: ``continuous`` / ``static`` metric blocks (p50/p99 latency,
+    TTFT, sustained tok/s) and ``parity_max_abs_diff`` (must be 0.0 —
+    the paged pool is a copy-exact rearrangement of the contiguous
+    cache, see serving/paged_kv.py).
+    """
+    from ..serving import ServingEngine, contiguous_engine
+    from ..serving import traffic as tr
+    from .mesh import make_host_mesh, make_production_mesh
+    # shard the pool planes + page-table lookups when devices exist; the
+    # degenerate 1-device mesh keeps the NamedSharding path exercised on
+    # the CPU container (values are identical either way — parity holds)
+    mesh = (make_production_mesh() if jax.device_count() > 1
+            else make_host_mesh())
+    rng = np.random.default_rng(args.seed)
+    prompt_lens = (args.prompt_len // 2, args.prompt_len)
+    gen_steps = (max(args.gen_steps // 4, 2), args.gen_steps)
+    reqs = tr.make_requests(args.requests, rng, vocab=cfg.vocab_size,
+                            prompt_lens=prompt_lens, gen_steps=gen_steps)
+    arrivals = tr.poisson_arrivals(len(reqs), args.rate, rng)
+    ps = args.page_size
+    budget = max(r["prompt"].shape[0] + r["max_new_tokens"] - 1
+                 for r in reqs)
+    view_pages = -(-budget // ps)
+    max_len = view_pages * ps        # shared padded width -> exact parity
+    slots = args.slots
+
+    shared_steps: dict = {}      # compiled steps shared across paged engines
+
+    def paged(**kw):
+        return ServingEngine(bundle, serve_params,
+                             num_pages=slots * view_pages + 1, page_size=ps,
+                             max_slots=slots, max_pages_per_slot=view_pages,
+                             prefill_chunk=args.prefill_chunk,
+                             step_cache=shared_steps, mesh=mesh, **kw)
+
+    # chunk widths this scenario can produce: full prefill chunks, each
+    # prompt length's remainder chunk, and single-token decode
+    pc = args.prefill_chunk
+    widths = {1} | {pc for p in prompt_lens if p >= pc} \
+        | {p % pc for p in prompt_lens if p % pc} \
+        | {p for p in prompt_lens if p < pc}
+
+    # -- parity gate: replay a slice through both cache structures ---------
+    n_par = min(len(reqs), 2 * slots)
+    diff = 0.0
+    traces = {}
+    for mk in ("paged", "contig"):
+        eng = paged(record_logits=True) if mk == "paged" else \
+            contiguous_engine(bundle, serve_params, max_slots=slots,
+                              max_len=max_len,
+                              prefill_chunk=args.prefill_chunk,
+                              mesh=mesh, record_logits=True)
+        for r in reqs[:n_par]:
+            eng.submit(r["prompt"], r["max_new_tokens"])
+        eng.run()
+        traces[mk] = eng.logits_trace
+    for rid, rows in traces["paged"].items():
+        ref = traces["contig"][rid]
+        assert len(rows) == len(ref), f"rid {rid} step count diverged"
+        diff = max(diff, max(float(np.max(np.abs(a - b)))
+                             for a, b in zip(rows, ref)))
+    assert diff == 0.0, \
+        f"paged KV diverged from the contiguous cache: max|dlogit|={diff}"
+    print(f"[serve/traffic] paged-vs-contiguous parity over {n_par} "
+          f"requests: max |dlogit| = {diff} (gate: exact)")
+
+    # -- equal-load A/B: continuous runtime vs the static batch loop -------
+    # both sides pre-compile off the timed path: the engine warms every
+    # (batch bucket, chunk width) step, the static loop warms its two fns
+    eng = paged()
+    n_fns = eng.warmup(chunk_widths=widths)
+    print(f"[serve/traffic] warmed {n_fns} step fns "
+          f"(buckets x chunk widths {sorted(widths)})")
+    prefill_fn = jax.jit(bundle.prefill)
+    decode_fn = jax.jit(bundle.decode_step)
+    from ..models.api import merge_prefill_cache
+    for p in prompt_lens:
+        wtoks = jnp.zeros((slots, p), jnp.int32)
+        lg, pfc = prefill_fn(serve_params, {"tokens": wtoks})
+        cache = merge_prefill_cache(bundle.init_cache(slots, max_len), pfc)
+        decode_fn(serve_params,
+                  {"tokens": jnp.zeros((slots, 1), jnp.int32),
+                   "cache_len": jnp.full((slots,), p, jnp.int32)}, cache)
+    cont = tr.run_continuous(eng, reqs, arrivals)
+    static = tr.run_static(bundle, serve_params, reqs, arrivals,
+                           batch=slots, max_len=max_len,
+                           prefill_fn=prefill_fn, decode_fn=decode_fn)
+    for name, m in (("continuous", cont), ("static", static)):
+        print(f"[serve/traffic/{name}] {m['sustained_tok_per_s']:.1f} tok/s "
+              f"sustained; latency p50={m['latency_s']['p50']:.3f}s "
+              f"p99={m['latency_s']['p99']:.3f}s; "
+              f"ttft p50={m['ttft_s']['p50']:.3f}s")
+    return {"scenario": {"requests": args.requests, "rate_per_s": args.rate,
+                         "seed": args.seed, "prompt_lens": list(prompt_lens),
+                         "gen_steps": list(gen_steps), "page_size": ps,
+                         "slots": slots, "prefill_chunk": args.prefill_chunk,
+                         "max_len": max_len},
+            "parity_max_abs_diff": diff, "parity_requests": n_par,
+            "continuous": cont, "static": static,
+            "speedup_sustained": cont["sustained_tok_per_s"]
+            / max(static["sustained_tok_per_s"], 1e-9)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default="olmo-1b")
@@ -195,6 +309,23 @@ def main(argv=None):
     ap.add_argument("--report", default=None,
                     help="write the serve report (incl. guard/degradation "
                          "events) to this JSON file")
+    ap.add_argument("--traffic", action="store_true",
+                    help="continuous-batching serving under a seeded "
+                         "Poisson arrival scenario (serving/): paged-KV "
+                         "runtime vs the static batch loop at equal load, "
+                         "plus the paged-vs-contiguous exact parity gate")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="traffic: number of requests in the scenario")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="traffic: Poisson arrival rate (req/s)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="traffic: KV pool page size (tokens per page)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="traffic: live-request slots (max batch)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="traffic: prompt tokens cached per prefill tick")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="traffic: scenario seed (arrivals + shapes)")
     args = ap.parse_args(argv)
     if args.inject_nan and not args.guard:
         ap.error("--inject-nan poisons the serving path by design; it is "
@@ -208,7 +339,7 @@ def main(argv=None):
     prompt = jax.random.randint(jax.random.key(1),
                                 (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
-    max_len = args.prompt_len + args.gen_steps + 1
+    max_len = args.prompt_len + args.gen_steps
 
     # ---- the offline pass: build the plan once, serve from it ------------
     plan_kwargs = dict(sparsity=args.sparsity,
@@ -312,9 +443,19 @@ def main(argv=None):
     print(f"[serve] parity sparse vs masked-dense: max |dlogit| = {diff:.2e}"
           f" (tol {tol:g});  engine dispatches: {stats}")
 
-    # ---- throughput: dense vs plan-driven sparse -------------------------
+    # ---- throughput ------------------------------------------------------
     results = {}
-    for mode, p in (("dense", params), ("sparse", sparse_params)):
+    if args.traffic:
+        # continuous-batching runtime (serving/) under Poisson load, served
+        # from the plan-carrying params — the paged pool + scheduler around
+        # the same decode_step the static loop uses
+        if cfg.family not in TRANSFORMER_FAMILIES:
+            ap.error(f"--traffic serves the transformer families "
+                     f"{TRANSFORMER_FAMILIES}; {cfg.family} has O(1) "
+                     "recurrent state (nothing to page)")
+        results["traffic"] = traffic_mode(bundle, sparse_params, cfg, args)
+    for mode, p in () if args.traffic else (("dense", params),
+                                            ("sparse", sparse_params)):
         # warm up (compile) outside the timed region
         greedy_generate(bundle, p, prompt, 1, max_len,
                         prefill_fn=prefill_fn, decode_fn=decode_fn)

@@ -90,6 +90,31 @@ def serving_plan(cfg: ModelConfig, params):
     return None
 
 
+def merge_prefill_cache(cache, prefill_cache):
+    """Seed a full-length decode cache with a prefill pass's cache.
+
+    ``cache`` is ``init_cache(b, max_len)``; ``prefill_cache`` is the cache
+    half of ``prefill(...)``.  State-shaped leaves (recurrent families:
+    identical shapes) are taken wholesale; KV-shaped leaves (a sequence
+    axis of ``prompt_len < max_len``) are prefix-written at offset 0.
+    Decode then actually attends to the prompt — feeding decode a zeroed
+    cache silently attends over zeros for every prompt position.
+    """
+    def leaf(z, pf):
+        if z.shape == pf.shape:
+            return pf.astype(z.dtype)
+        diff = [i for i, (a, b) in enumerate(zip(z.shape, pf.shape))
+                if a != b]
+        if z.ndim != pf.ndim or len(diff) != 1 \
+                or pf.shape[diff[0]] > z.shape[diff[0]]:
+            raise ValueError(
+                f"prefill cache leaf {pf.shape} does not embed in decode "
+                f"cache leaf {z.shape}")
+        return jax.lax.dynamic_update_slice(z, pf.astype(z.dtype),
+                                            (0,) * z.ndim)
+    return jax.tree.map(leaf, cache, prefill_cache)
+
+
 def build_model(cfg: ModelConfig, mesh=None) -> ModelBundle:
     # import for side-effect registration
     from . import transformer, rwkv6, zamba2  # noqa: F401

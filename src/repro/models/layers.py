@@ -198,6 +198,38 @@ def blocked_causal_attention(q: Array, k: Array, v: Array, *,
     return out.astype(q.dtype)
 
 
+def decode_attention_planes(q: Array, k_planes: Array, v_planes: Array,
+                            cache_len: Array) -> Array:
+    """Chunked decode attention on a plane-layout KV cache.
+
+    q: [B, C, H, dh] — C >= 1 *new* tokens (already rope'd) whose K/V rows
+    were just written at cache positions ``cache_len .. cache_len + C - 1``;
+    k/v planes: [B*KH, Smax, dh] (plane ``b * KH + h``); cache_len: [B] =
+    tokens cached *before* this chunk.  Query i attends to positions
+    ``j <= cache_len + i`` (prefix + intra-chunk causal).  C == 1 is the
+    classic decode step; C > 1 is a prefill chunk attending to the already-
+    cached prefix — the continuous-batching runtime's chunked-prefill form.
+    """
+    b, c, h, dh = q.shape
+    kh = k_planes.shape[0] // b
+    g = h // kh
+    smax = k_planes.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    k4 = k_planes.reshape(b, kh, smax, dh)
+    v4 = v_planes.reshape(b, kh, smax, dh)
+    qg = q.reshape(b, c, kh, g, dh)
+    sc = jnp.einsum("bqhgd,bhkd->bhgqk", qg, k4,
+                    preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(smax)
+    last = cache_len[:, None] + jnp.arange(c)[None, :]      # [B, C]
+    mask = pos[None, None, :] <= last[:, :, None]           # [B, C, Smax]
+    sc = jnp.where(mask[:, None, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v4,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, c, h, dh).astype(q.dtype)
+
+
 def decode_attention(q: Array, k_cache: Array, v_cache: Array,
                      cache_len: Array) -> Array:
     """Single-token attention: q [B,1,H,dh] vs cache [B,Smax,KH,dh].

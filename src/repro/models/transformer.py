@@ -32,11 +32,12 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
 from ..distributed import sharding as shd
+from ..kernels.kv_cache_update import kv_cache_write_chunk, to_planes
 from .api import (ModelBundle, planned_proj as _proj, register_family,
                   serving_plan)
 from .layers import (apply_rope, blocked_causal_attention, causal_lm_labels,
-                     chunked_cross_entropy, decode_attention, layer_norm,
-                     rms_norm)
+                     chunked_cross_entropy, decode_attention_planes,
+                     layer_norm, rms_norm)
 
 Array = jax.Array
 
@@ -245,30 +246,38 @@ def _attn(cfg: ModelConfig, lp, h: Array, positions: Array, mesh,
     q = apply_rope(q, positions, theta=cfg.rope_theta)
     k = apply_rope(k, positions, theta=cfg.rope_theta)
     if kv_override is not None:
+        # plane-layout cache [B*KH, Smax, dh]; s >= 1 new tokens land at
+        # rows clen .. clen + s - 1 of each sequence's planes (s > 1 is a
+        # prefill chunk attending to the cached prefix)
         k_cache, v_cache, clen = kv_override
+        k_t = to_planes(k).astype(k_cache.dtype)            # [B*KH, s, dh]
+        v_t = to_planes(v).astype(v_cache.dtype)
+        pos_rep = jnp.repeat(clen, nkv)                     # [B*KH]
         if cfg.cache_update == "scatter":
-            # token-sized write: O(B*KH*dh) traffic instead of a full-cache
-            # rewrite (§Perf C) — the TPU kernel form of the paper's
-            # "write the NZEs, not the zeros" storage discipline.
-            bidx = jnp.arange(b)
-            k_cache = k_cache.at[bidx, clen].set(
-                k[:, 0].astype(k_cache.dtype))
-            v_cache = v_cache.at[bidx, clen].set(
-                v[:, 0].astype(v_cache.dtype))
+            # row-sized indexed write: O(B*KH*s*dh) traffic instead of a
+            # full-cache rewrite (§Perf C) — the XLA twin of the Pallas
+            # `kv_cache_update` kernel; plane layout keeps it genuinely in
+            # place (no relayout around the write).
+            k_cache = kv_cache_write_chunk(k_cache, k_t, pos_rep)
+            v_cache = kv_cache_write_chunk(v_cache, v_t, pos_rep)
         else:
             # mask-select rewrite: elementwise over the cache, trivially
-            # partition-safe for any cache sharding (the baseline)
+            # partition-safe for any cache sharding (the baseline).  The
+            # one-hot einsum is exact (products with 1.0/0.0), so this and
+            # the scatter path are bitwise-identical.
             smax = k_cache.shape[1]
-            wmask = (jnp.arange(smax)[None, :]
-                     == clen[:, None])[..., None, None]
-            k_cache = jnp.where(wmask,
-                                k[:, 0][:, None].astype(k_cache.dtype),
+            rows = pos_rep[:, None] + jnp.arange(s)[None, :]
+            oh = rows[:, :, None] == jnp.arange(smax)[None, None, :]
+            written = oh.any(axis=1)[..., None]             # [B*KH, Smax, 1]
+            ohf = oh.astype(k_cache.dtype)
+            k_cache = jnp.where(written,
+                                jnp.einsum("pcs,pcd->psd", ohf, k_t),
                                 k_cache)
-            v_cache = jnp.where(wmask,
-                                v[:, 0][:, None].astype(v_cache.dtype),
+            v_cache = jnp.where(written,
+                                jnp.einsum("pcs,pcd->psd", ohf, v_t),
                                 v_cache)
-        o = decode_attention(q, k_cache.astype(_cdtype(cfg)),
-                             v_cache.astype(_cdtype(cfg)), clen + 1)
+        o = decode_attention_planes(q, k_cache.astype(_cdtype(cfg)),
+                                    v_cache.astype(_cdtype(cfg)), clen)
         kv_out = (k_cache, v_cache)
     else:
         q_chunk = min(cfg.q_chunk, s)
@@ -477,7 +486,10 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
             h, = carry
             h, (k, v), _ = _block(cfg, mesh, h, lp, positions,
                                   plan_layers=plp)
-            return (h,), (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+            # cache leaves leave prefill in plane layout [B*KH, S, dh] —
+            # the end-to-end decode/serving cache layout
+            return (h,), (to_planes(k).astype(jnp.bfloat16),
+                          to_planes(v).astype(jnp.bfloat16))
         body_fn = jax.checkpoint(body, policy=remat_policy) if cfg.remat else body
         xs = (params["blocks"], plan.layers) if plan is not None \
             else params["blocks"]
@@ -489,14 +501,20 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
 
     def init_cache(batch_size, max_len):
         l, kh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-        shape = (l, batch_size, max_len, kh, dh)
+        # plane layout: [L, B*KH, Smax, dh] — plane b*KH + h owns one
+        # sequence/head's rows, so decode's indexed write touches [1, dh]
+        # rows with no relayout (kernels/kv_cache_update.py)
+        shape = (l, batch_size * kh, max_len, dh)
         return {"k": jnp.zeros(shape, jnp.bfloat16),
                 "v": jnp.zeros(shape, jnp.bfloat16)}
 
     def decode_step(params, batch, cache):
+        """One decode step of ``s >= 1`` tokens per live sequence: s == 1
+        is classic decode, s > 1 a prefill chunk (tokens attend to the
+        cached prefix + causally within the chunk)."""
         tokens, clen = batch["tokens"], batch["cache_len"]
-        b = tokens.shape[0]
-        positions = clen[:, None]
+        b, s = tokens.shape
+        positions = clen[:, None] + jnp.arange(s)[None, :]
         h = _embed_tokens(cfg, params, batch, mesh)
         plan = _serving_plan(params)
 
@@ -524,10 +542,10 @@ def build(cfg: ModelConfig, mesh=None) -> ModelBundle:
     def cache_specs(batch_size):
         if mesh is None:
             return {"k": P(), "v": P()}
-        # B over dp when divisible; S over model (sequence-parallel cache —
-        # every assigned decode shape has S divisible by 16).
-        dp = shd.shard_batch(mesh, batch_size)
-        kv_spec = P(None, dp, "model", None, None)
+        # planes (B*KH) over dp then model when divisible; rows replicated
+        # so the per-plane indexed write stays partition-local
+        kv_spec = shd.kv_plane_spec(mesh, batch_size * cfg.n_kv_heads,
+                                    lead_dims=1)
         return {"k": kv_spec, "v": kv_spec}
 
     return ModelBundle(cfg=cfg, init=init, train_loss=train_loss,

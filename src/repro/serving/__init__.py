@@ -1,0 +1,18 @@
+"""Continuous-batching serving runtime on a paged plane-layout KV cache.
+
+Layering (DESIGN.md §12):
+
+* `pages`     — host-side page allocator + per-slot page table
+* `paged_kv`  — device pool ``[L, num_pages*KH, page_size, dh]`` and the
+                gather-view / extract-rows / scatter-back ops
+* `scheduler` — deterministic admission control, prefill chunking,
+                prefill/decode interleave, streaming bookkeeping
+* `engine`    — `ServingEngine`: one fused jitted step per
+                (pow-2 batch bucket, chunk width); per-request NaN
+                quarantine via `engine.guard.nonfinite_rows`
+* `traffic`   — seeded Poisson scenarios + the static-loop baseline the
+                benchmark compares against
+"""
+from .engine import ServingEngine, contiguous_engine          # noqa: F401
+from .pages import OutOfPages, PageAllocator, PageTable       # noqa: F401
+from .scheduler import Request, Scheduler                     # noqa: F401

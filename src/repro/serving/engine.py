@@ -1,0 +1,303 @@
+"""Continuous-batching serving engine on the paged plane-layout KV pool.
+
+One ``tick`` = admit waiting requests, ask the scheduler for the next
+rectangular batch (a decode step or a prefill chunk — `serving.scheduler`
+interleaves them), and run ONE fused jitted step:
+
+    gather pages -> contiguous plane view -> bundle.decode_step -> extract
+    written rows -> scatter back into the pool
+
+The live batch is padded to the next power of two, so the number of
+distinct compiled step shapes is O(log max_batch * chunk widths) no matter
+how the live set churns — padding slots gather/scatter through the
+reserved null page and their logits rows are ignored.  The *model* is
+untouched: prefill chunks and decode steps are both
+``models/*.decode_step`` (``s >= 1``), the continuous-batching machinery
+lives entirely in index construction around it.
+
+Per-request NaN guard: after every step the engine checks row-wise logits
+finiteness (`engine.guard.nonfinite_rows`); a poisoned request is
+quarantined — evicted, its pages freed, an event recorded — while the
+rest of the batch keeps serving.  This is the serving-side complement of
+`engine.guard`'s plan-level quarantine: there the *layer* is the fault
+unit, here the *request* is.
+
+Exactness: the gather is a copy and the extract/scatter moves exactly the
+rows the step wrote, so a paged run's logits are bitwise equal to a
+contiguous-cache run of the same schedule and padded width.  A contiguous
+engine IS the degenerate config ``page_size == view width`` (one page per
+slot) — `contiguous_engine` builds it; BENCH_serve.json's parity gate
+diffs the two at 0.0.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import TRANSFORMER_FAMILIES
+from . import paged_kv
+from .pages import PageAllocator, PageTable
+from .scheduler import DECODE, PREFILL, Request, Scheduler
+
+
+class ServingEngine:
+    def __init__(self, bundle, params, *, num_pages: int, page_size: int,
+                 max_slots: int, max_pages_per_slot: int,
+                 prefill_chunk: int = 8, mesh=None,
+                 stream_cb: Optional[Callable] = None,
+                 record_logits: bool = False,
+                 step_cache: Optional[dict] = None):
+        cfg = bundle.cfg
+        if cfg.family not in TRANSFORMER_FAMILIES:
+            raise ValueError(
+                f"paged serving covers the transformer families "
+                f"{TRANSFORMER_FAMILIES}; {cfg.family} caches O(1) state, "
+                "not KV rows — paging it is meaningless")
+        self.bundle = bundle
+        self.params = params
+        self.kh = cfg.n_kv_heads
+        self.view_pages = max_pages_per_slot
+        self.page_size = page_size
+        self.decode_fuse = 8        # max decode steps fused per tick
+        self.pool = paged_kv.init_pool(cfg.n_layers, num_pages, self.kh,
+                                       page_size, cfg.head_dim)
+        if mesh is not None:
+            shardings = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s),
+                paged_kv.paged_pool_specs(mesh, num_pages, self.kh))
+            self.pool = {k: jax.device_put(v, shardings[k])
+                         for k, v in self.pool.items()}
+        self.table = PageTable(max_slots, max_pages_per_slot, page_size)
+        self.alloc = PageAllocator(num_pages)
+        self.sched = Scheduler(self.table, self.alloc,
+                               prefill_chunk=prefill_chunk,
+                               max_batch=max_slots)
+        self.stream_cb = stream_cb
+        self.events: list[dict] = []
+        self.logits_trace: dict[int, list] = {} if record_logits else None
+        self.decode_rows = 0            # useful decode-step rows executed
+        # engines with identical geometry (the parity replay + the timed
+        # run) can share compiled steps: pass the same dict to both
+        self._steps: dict[tuple, Callable] = \
+            step_cache if step_cache is not None else {}
+
+    # -- request API -------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               arrival: float = 0.0) -> Request:
+        req = self.sched.submit(np.asarray(prompt, np.int32),
+                                max_new_tokens, arrival)
+        budget = req.budget_tokens
+        cap = self.view_pages * self.page_size
+        if budget > cap:
+            raise ValueError(
+                f"request needs {budget} cache rows; the per-slot budget "
+                f"is {self.view_pages} pages x {self.page_size} = {cap}")
+        return req
+
+    def warmup(self, chunk_widths=(1,)) -> int:
+        """Pre-compile the fused step for every (pow-2 batch bucket, chunk
+        width) the scenario can hit — compilation off the timed path, the
+        serving twin of the static loop's warmup generate.  All-padding
+        batches (every slot -1) make the calls side-effect-free: gather
+        and scatter touch only the reserved null page.  Returns the
+        number of step functions now resident.
+        """
+        buckets, b = [], 1
+        while b < self.sched.max_batch:
+            buckets.append(b)
+            b <<= 1
+        buckets.append(b)
+        fuse, k = [], 1
+        while k <= self.decode_fuse:
+            fuse.append(k)
+            k <<= 1
+        keys = [(c, 1) for c in sorted(set(chunk_widths)) if c != 1] \
+            + [(1, k) for k in fuse]
+        for chunk, ksteps in keys:
+            for b in buckets:
+                slots = [-1] * b
+                clen = np.zeros(b, np.int32)
+                gp = paged_kv.gather_planes(self.table, slots, self.kh,
+                                            self.view_pages)
+                sp, sr = paged_kv.scatter_indices(self.table, slots, clen,
+                                                  self.kh, chunk * ksteps)
+                out = self._step_fn(b, chunk, ksteps)(
+                    self.params, self.pool["k"], self.pool["v"],
+                    jnp.zeros((b, chunk), jnp.int32), jnp.asarray(clen),
+                    jnp.asarray(gp), jnp.asarray(sp), jnp.asarray(sr))
+                # under donation the old pool buffers are dead — adopt the
+                # returned ones (identical outside the null page)
+                self.pool = {"k": out[1], "v": out[2]}
+                jax.block_until_ready(out[0])
+        return len(self._steps)
+
+    def run(self, now_fn: Optional[Callable[[], float]] = None) -> None:
+        """Serve until every submitted request retires."""
+        now_fn = now_fn or (lambda: 0.0)
+        while not self.sched.idle:
+            if not self.tick(now=now_fn()):
+                break       # only unadmittable work left: caller's problem
+
+    # -- one engine tick ---------------------------------------------------
+
+    def tick(self, now: float = 0.0) -> bool:
+        self.sched.admit()
+        work = self.sched.next_work()
+        if work is None:
+            return False
+        kind, reqs, chunk = work
+        n = len(reqs)
+        b = 1 << max(n - 1, 0).bit_length()         # pow-2 batch bucket
+        if kind == "decode":
+            # fuse while the live set is provably stable: greedy budgets
+            # make every finish deterministic, so min remaining steps is a
+            # sound horizon; pow-2-floor it to bound compile keys
+            rem = min(r.max_new_tokens - len(r.out_tokens) for r in reqs)
+            ksteps = 1 << (min(rem, self.decode_fuse).bit_length() - 1)
+        else:
+            ksteps = 1
+        slots = [r.slot for r in reqs] + [-1] * (b - n)
+        clen = np.array([r.pos for r in reqs] + [0] * (b - n), np.int32)
+        toks = np.zeros((b, chunk), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i] = (r.prompt[r.pos:r.pos + chunk] if kind == "prefill"
+                       else [r.last_token])
+        rows = chunk if kind == "prefill" else ksteps
+        gplanes = paged_kv.gather_planes(self.table, slots, self.kh,
+                                         self.view_pages)
+        splanes, srows = paged_kv.scatter_indices(self.table, slots, clen,
+                                                  self.kh, rows)
+        logits, pk, pv, toks_out, finite = self._step_fn(b, chunk, ksteps)(
+            self.params, self.pool["k"], self.pool["v"],
+            jnp.asarray(toks), jnp.asarray(clen), jnp.asarray(gplanes),
+            jnp.asarray(splanes), jnp.asarray(srows))
+        self.pool = {"k": pk, "v": pv}
+        # the only per-tick host syncs: two [K, B]-sized vectors (logits
+        # stay on device unless a parity trace asked for them)
+        toks_out = np.asarray(toks_out)
+        bad = ~np.asarray(finite)
+        rec = (np.asarray(logits.astype(jnp.float32))
+               if self.logits_trace is not None else None)
+        self._absorb(kind, reqs, chunk, ksteps, toks_out, bad, rec, now)
+        return True
+
+    def _absorb(self, kind: str, reqs: list[Request], chunk: int,
+                ksteps: int, toks: np.ndarray, bad: np.ndarray,
+                logits: Optional[np.ndarray], now: float) -> None:
+        gone: set[int] = set()
+        for k in range(ksteps):
+            for i, r in enumerate(reqs):
+                if r.rid in gone:
+                    continue
+                if kind == "prefill":
+                    self.sched.on_prefill(r, chunk)
+                    if r.state != DECODE:
+                        continue        # prompt not finished: logits unused
+                if bad[k, i]:
+                    # wipe before the pages go back on the free list: a
+                    # poisoned request leaves non-finite cache rows, and a
+                    # masked NaN still poisons attention (0 * NaN)
+                    self._wipe_slot(r)
+                    self.sched.quarantine(r, now)
+                    self.events.append({"event": "request_quarantine",
+                                        "rid": r.rid, "at": kind,
+                                        "pos": int(r.pos)})
+                    gone.add(r.rid)
+                    continue
+                if kind == "decode":
+                    self.decode_rows += 1
+                if logits is not None:
+                    self.logits_trace.setdefault(r.rid, []).append(
+                        logits[k, i])
+                self.sched.on_token(r, int(toks[k, i]), now)
+                if self.stream_cb is not None:
+                    self.stream_cb(r.rid, int(toks[k, i]), now)
+                if r.state not in (PREFILL, DECODE):
+                    gone.add(r.rid)     # retired at its deterministic step
+
+    def _wipe_slot(self, r: Request) -> None:
+        from .pages import NULL_PAGE
+        pages = [int(p) for p in self.table.table[r.slot] if p != NULL_PAGE]
+        if not pages:
+            return
+        planes = np.array([p * self.kh + h
+                           for p in pages for h in range(self.kh)])
+        self.pool = {k: v.at[:, planes].set(0) for k, v in self.pool.items()}
+
+    # -- the fused step, cached per (batch bucket, chunk, fused steps) -----
+
+    def _step_fn(self, b: int, chunk: int, ksteps: int = 1) -> Callable:
+        """One jitted gather -> decode^ksteps -> scatter.
+
+        ``ksteps > 1`` (decode only, ``chunk == 1``) chains the greedy
+        argmax feedback *on device* through a ``lax.scan``: one dispatch
+        and one host sync cover ``ksteps`` generated tokens, which is what
+        lets the tick loop keep pace with a free-running static decode
+        loop (per-token host sync was the dominant serving overhead).
+        Returns ``(logits [K,B,vocab], pool_k, pool_v, tokens [K,B],
+        finite [K,B])``.
+        """
+        key = (b, chunk, ksteps)
+        if key not in self._steps:
+            assert ksteps == 1 or chunk == 1, "fusion is decode-only"
+            decode_step, kh = self.bundle.decode_step, self.kh
+            rows = chunk * ksteps
+
+            def step(params, pool_k, pool_v, tokens, clen, gplanes,
+                     splanes, srows):
+                vk = paged_kv.gather_view(pool_k, gplanes)
+                vv = paged_kv.gather_view(pool_v, gplanes)
+                if ksteps == 1:
+                    logits, new = decode_step(
+                        params, {"tokens": tokens, "cache_len": clen},
+                        {"k": vk, "v": vv})
+                    vk, vv = new["k"], new["v"]
+                    lg = logits[None]
+                    tk = jnp.argmax(logits, -1).astype(jnp.int32)[None]
+                    fin = jnp.isfinite(logits).all(axis=-1)[None]
+                else:
+                    def body(carry, _):
+                        vk, vv, tok, cl = carry
+                        logits, new = decode_step(
+                            params, {"tokens": tok, "cache_len": cl},
+                            {"k": vk, "v": vv})
+                        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                        return ((new["k"], new["v"], nxt[:, None], cl + 1),
+                                (logits, nxt,
+                                 jnp.isfinite(logits).all(axis=-1)))
+                    (vk, vv, _, _), (lg, tk, fin) = jax.lax.scan(
+                        body, (vk, vv, tokens, clen), None, length=ksteps)
+                clen_rep = jnp.repeat(clen, kh)
+                # nan_to_num is the identity on healthy rows (exactness
+                # preserved) and keeps the pool finite even while a
+                # poisoned request is in flight: batch-padding rows gather
+                # unmapped pages, and a masked NaN would still poison
+                # attention through 0 * NaN
+                kr = jnp.nan_to_num(paged_kv.extract_rows(vk, clen_rep, rows))
+                vr = jnp.nan_to_num(paged_kv.extract_rows(vv, clen_rep, rows))
+                pool_k = paged_kv.scatter_rows(pool_k, kr, splanes, srows)
+                pool_v = paged_kv.scatter_rows(pool_v, vr, splanes, srows)
+                return lg, pool_k, pool_v, tk, fin
+
+            # donating the pool makes the scatter a true in-place update on
+            # TPU; CPU ignores donation (and warns), so only ask for it
+            # where it bites
+            donate = (1, 2) if jax.default_backend() != "cpu" else ()
+            self._steps[key] = jax.jit(step, donate_argnums=donate)
+        return self._steps[key]
+
+
+def contiguous_engine(bundle, params, *, max_slots: int, max_len: int,
+                      prefill_chunk: int = 8, mesh=None,
+                      **kw) -> ServingEngine:
+    """The degenerate paged engine: one ``max_len``-row page per slot —
+    a contiguous per-slot cache running the *identical* schedule and step
+    functions.  The parity baseline for the paged A/B."""
+    return ServingEngine(bundle, params, num_pages=max_slots + 1,
+                         page_size=max_len, max_slots=max_slots,
+                         max_pages_per_slot=1, prefill_chunk=prefill_chunk,
+                         mesh=mesh, **kw)

@@ -1,0 +1,125 @@
+"""Device-side paged KV pool: plane-layout pages + gather/scatter views.
+
+The pool generalizes the contiguous plane cache (``models/*.init_cache``:
+``[L, B*KH, Smax, dh]``) by cutting the row axis into fixed-size pages:
+
+    pool[k|v] : [L, num_pages * KH, page_size, dh]
+
+Pool plane ``page * KH + h`` holds kv-head ``h``'s rows of one page — the
+same plane-per-(owner, head) rule as the contiguous cache, with *page* as
+the owner instead of *sequence*.  A request's logical position ``t`` lives
+at page ``table[slot, t // page_size]``, row ``t % page_size``
+(`serving.pages`).
+
+A batch step never indexes pages inside the model.  Instead the engine
+
+1. **gathers** each live slot's pages into a contiguous plane view
+   ``[L, B*KH, V*page_size, dh]`` (pure copy — bitwise identical to the
+   cache a contiguous run would hold),
+2. runs the *unmodified* ``bundle.decode_step`` on the view, and
+3. **extracts** the rows the step wrote (``clen .. clen+C-1`` per
+   sequence) and scatters exactly those back into the pool.
+
+Copies and row extraction are value-exact, so paged serving's logits are
+*bitwise equal* to a contiguous-cache run of the same padded width — the
+parity gate in BENCH_serve.json asserts max |diff| == 0.  A contiguous
+cache is literally the degenerate configuration ``page_size == max_len``
+(one page per request), which is how the benchmark's A/B mirror is built.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pages import NULL_PAGE, PageTable
+
+Array = jax.Array
+
+
+def init_pool(n_layers: int, num_pages: int, n_kv_heads: int,
+              page_size: int, head_dim: int, dtype=jnp.bfloat16):
+    shape = (n_layers, num_pages * n_kv_heads, page_size, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Host-side index building (numpy; shapes fixed per (B, V, C) bucket so the
+# jitted step recompiles only per bucket, not per tick)
+# ---------------------------------------------------------------------------
+
+def gather_planes(pt: PageTable, slots, kh: int, view_pages: int) -> np.ndarray:
+    """``[B*KH, V]`` pool-plane ids backing each view plane's pages.
+
+    ``slots`` may contain -1 entries (batch padding): they gather the null
+    page.  View plane ``b*KH + h`` page ``j`` comes from pool plane
+    ``table[slot_b, j] * KH + h``.
+    """
+    b = len(slots)
+    pages = np.full((b, view_pages), NULL_PAGE, np.int32)
+    for i, s in enumerate(slots):
+        if s >= 0:
+            pages[i] = pt.table[s, :view_pages]
+    planes = pages[:, None, :] * kh + np.arange(kh, dtype=np.int32)[None, :, None]
+    return planes.reshape(b * kh, view_pages).astype(np.int32)
+
+
+def scatter_indices(pt: PageTable, slots, clen, kh: int,
+                    chunk: int) -> tuple[np.ndarray, np.ndarray]:
+    """Pool (plane, row) targets for the ``chunk`` rows written at
+    positions ``clen[i] .. clen[i]+chunk-1`` of each slot.
+
+    Both arrays are ``[B*KH, chunk]``.  Padding slots (-1) and positions
+    past a slot's mapped pages target the null page (harmless garbage).
+    """
+    b, ps = len(slots), pt.page_size
+    planes = np.full((b, kh, chunk), NULL_PAGE * kh, np.int64)
+    rows = np.zeros((b, kh, chunk), np.int64)
+    for i, s in enumerate(slots):
+        if s < 0:
+            continue
+        t = int(clen[i]) + np.arange(chunk)
+        page = pt.table[s, t // ps]
+        planes[i] = page[None, :] * kh + np.arange(kh)[:, None]
+        rows[i] = np.broadcast_to(t % ps, (kh, chunk))
+    return (planes.reshape(b * kh, chunk).astype(np.int32),
+            rows.reshape(b * kh, chunk).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Device-side view ops (jit-traced inside the engine's fused step)
+# ---------------------------------------------------------------------------
+
+def gather_view(pool_leaf: Array, planes: Array) -> Array:
+    """``[L, P, ps, dh]`` pool + ``[Bkh, V]`` plane ids ->
+    ``[L, Bkh, V*ps, dh]`` contiguous plane view."""
+    l, _, ps, dh = pool_leaf.shape
+    bkh, v = planes.shape
+    view = pool_leaf[:, planes]                     # [L, Bkh, V, ps, dh]
+    return view.reshape(l, bkh, v * ps, dh)
+
+
+def extract_rows(view_leaf: Array, clen_rep: Array, chunk: int) -> Array:
+    """Rows ``clen_rep[p] .. +chunk-1`` of each view plane:
+    ``[L, Bkh, W, dh]`` -> ``[L, Bkh, chunk, dh]``."""
+    rows = clen_rep[:, None] + jnp.arange(chunk)[None, :]       # [Bkh, C]
+    return jnp.take_along_axis(view_leaf, rows[None, :, :, None], axis=2)
+
+
+def scatter_rows(pool_leaf: Array, rows_val: Array, planes: Array,
+                 row_ids: Array) -> Array:
+    """Write ``rows_val`` ``[L, Bkh, C, dh]`` at pool ``(planes, row_ids)``
+    (both ``[Bkh, C]``)."""
+    return pool_leaf.at[:, planes, row_ids].set(
+        rows_val.astype(pool_leaf.dtype))
+
+
+def paged_pool_specs(mesh, num_pages: int, n_kv_heads: int):
+    """PartitionSpecs for the pool leaves: planes over dp/model
+    (`distributed.sharding.kv_plane_spec` — the pool is per-model-stacked,
+    so one leading L dim).  The page table itself stays host-side numpy;
+    its device mirror, if ever materialized, is replicated
+    (`sharding.page_table_spec`)."""
+    from ..distributed import sharding as shd
+    spec = shd.kv_plane_spec(mesh, num_pages * n_kv_heads, lead_dims=1)
+    return {"k": spec, "v": spec}

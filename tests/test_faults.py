@@ -391,10 +391,14 @@ def test_greedy_generate_overrun_raises():
     params = bundle.init(jax.random.key(0))
     prompt = jax.random.randint(jax.random.key(1), (2, 16), 0,
                                 cfg.vocab_size)
+    # one past the boundary overruns: prompt + steps == max_len + 1
+    with pytest.raises(ValueError, match="KV cache overrun"):
+        serve.greedy_generate(bundle, params, prompt, steps=3, max_len=18)
     with pytest.raises(ValueError, match="KV cache overrun"):
         serve.greedy_generate(bundle, params, prompt, steps=8, max_len=16)
-    # the exact boundary is fine: prompt + steps + 1 == max_len
-    toks = serve.greedy_generate(bundle, params, prompt, steps=2, max_len=19)
+    # the exact boundary is fine: prompt + steps == max_len — the final
+    # sampled token is never fed back, so it needs no KV slot
+    toks = serve.greedy_generate(bundle, params, prompt, steps=2, max_len=18)
     assert toks.shape == (2, 3)
 
 

@@ -339,15 +339,40 @@ def test_im2col_column_order_matches_pruning_layout():
 @pytest.mark.parametrize("b,s,kh,dh", [(2, 16, 1, 8), (4, 32, 2, 16),
                                        (3, 17, 5, 4)])
 def test_kv_cache_update_kernel(b, s, kh, dh):
+    """Plane-layout [P, S, dh] row write: pallas == xla == mask oracle,
+    and each plane's position is honoured independently."""
     from repro.kernels.kv_cache_update import (kv_cache_update_pallas,
-                                               kv_cache_update_ref)
+                                               kv_cache_update_ref,
+                                               kv_cache_update_xla)
+    p = b * kh
     r = np.random.default_rng(b * 100 + s)
-    cache = jnp.asarray(r.standard_normal((b, s, kh, dh)), jnp.float32)
-    new = jnp.asarray(r.standard_normal((b, kh, dh)), jnp.float32)
-    pos = jnp.asarray(r.integers(0, s, b), jnp.int32)
-    got = kv_cache_update_pallas(cache, new, pos)
+    cache = jnp.asarray(r.standard_normal((p, s, dh)), jnp.float32)
+    new = jnp.asarray(r.standard_normal((p, dh)), jnp.float32)
+    pos = jnp.asarray(r.integers(0, s, p), jnp.int32)
     want = kv_cache_update_ref(cache, new, pos)
+    got = kv_cache_update_pallas(cache, new, pos)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    got_xla = kv_cache_update_xla(cache, new, pos)
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(want))
+
+
+def test_kv_cache_plane_roundtrip_and_chunk_write():
+    from repro.kernels.kv_cache_update import (from_planes, to_planes,
+                                               kv_cache_update_xla,
+                                               kv_cache_write_chunk)
+    r = np.random.default_rng(7)
+    kv = jnp.asarray(r.standard_normal((3, 12, 2, 4)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(from_planes(to_planes(kv), 2)),
+                                  np.asarray(kv))
+    # a C-token chunk write == C sequential single-row writes
+    cache = jnp.asarray(r.standard_normal((6, 12, 4)), jnp.float32)
+    new = jnp.asarray(r.standard_normal((6, 3, 4)), jnp.float32)
+    pos = jnp.asarray(r.integers(0, 12 - 3, 6), jnp.int32)
+    got = kv_cache_write_chunk(cache, new, pos)
+    want = cache
+    for i in range(3):
+        want = kv_cache_update_xla(want, new[:, i], pos + i)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_ssd_chunked_matches_scan():

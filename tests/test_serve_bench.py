@@ -26,7 +26,7 @@ def test_serve_bench_failures_exit_nonzero(tmp_path, capsys):
     silently drop an arch from the regression gate."""
     sb = _load_serve_bench()
     out = tmp_path / "bench_serve.json"
-    rc = sb.main(["--smoke", "--out", str(out),
+    rc = sb.main(["--smoke", "--out", str(out), "--no-traffic",
                   "--archs", "no-such-arch,also-bogus"])
     assert rc != 0
     report = json.loads(out.read_text())
@@ -60,3 +60,11 @@ def test_serve_bench_smoke_gate(tmp_path):
                 assert cell[mode][f"{phase}_tokens_per_s"] > 0, (arch, mode)
         assert cell["engine_stats"].get("balanced_spmm", 0) > 0, arch
         assert cell["plan"]["sparse_layers"] > 0, arch
+    # the traffic cell: exact paged-KV parity, continuous beats static
+    # (rc 0 already implies the gate held; assert the committed shape)
+    traffic = report["traffic"]
+    assert traffic["parity_max_abs_diff"] == 0.0
+    assert traffic["speedup_sustained"] > 1.0
+    for side in ("continuous", "static"):
+        for k in ("p50", "p99"):
+            assert traffic[side]["latency_s"][k] > 0.0

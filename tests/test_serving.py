@@ -1,0 +1,273 @@
+"""Serving-runtime invariants (`repro.serving`, DESIGN.md §12).
+
+Host layer (no device work, so these drive thousands of scheduler ticks):
+page conservation (no leaks across admit/retire/quarantine churn), no
+cross-request page aliasing, full-budget admission never overrunning a
+slot's mapped pages, and tick-sequence determinism.  The churn driver is
+shared between seeded parametrized runs (always on) and a Hypothesis
+wrapper (property search when hypothesis is installed, e.g. in CI).
+
+Engine layer (real model, real pool): paged-KV logits parity — the paged
+pool is a copy-exact rearrangement of the contiguous cache, so traces
+must match *bitwise* — and the per-request NaN quarantine: a poisoned
+request is evicted and its pages wiped while the rest of the batch keeps
+serving.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.serving import (OutOfPages, PageAllocator, PageTable, Scheduler,
+                           ServingEngine, contiguous_engine)
+from repro.serving.pages import NULL_PAGE
+
+# ---------------------------------------------------------------------------
+# host-layer churn driver
+# ---------------------------------------------------------------------------
+
+
+def _make_sched(*, max_slots=3, max_pages_per_slot=6, page_size=4,
+                num_pages=16, prefill_chunk=3, max_batch=4):
+    table = PageTable(max_slots=max_slots,
+                      max_pages_per_slot=max_pages_per_slot,
+                      page_size=page_size)
+    alloc = PageAllocator(num_pages)
+    return Scheduler(table, alloc, prefill_chunk=prefill_chunk,
+                     max_batch=max_batch), table, alloc
+
+
+def _check_no_aliasing(table: PageTable, alloc: PageAllocator) -> None:
+    """Every mapped page is owned by exactly one slot, and the table's
+    live pages are exactly the allocator's owned set."""
+    live = [int(p) for p in table.table.ravel() if p != NULL_PAGE]
+    assert len(live) == len(set(live)), f"page aliased across slots: {live}"
+    assert set(live) == alloc._owned
+    assert alloc.free_pages + len(live) == alloc.num_pages - 1
+
+
+def _drive(sched: Scheduler, rng: random.Random, *,
+           quarantine_prob: float = 0.0, table=None, alloc=None,
+           trace: list | None = None) -> None:
+    """Drain the scheduler, simulating the engine's outcome reporting
+    (prefill chunks advance the table; the first decode token comes free
+    from prefill logits; each later fed-back token advances by one row —
+    mirrors `serving.engine._absorb`), checking invariants every tick."""
+    guard = 0
+    while not sched.idle:
+        guard += 1
+        assert guard < 10_000, "scheduler failed to drain"
+        sched.admit()
+        work = sched.next_work()
+        if work is None:
+            assert not sched.live, "live work but nothing schedulable"
+            # waiting-only: admission blocked — only legal if the head
+            # request cannot currently get a slot or its full budget
+            head = sched.waiting[0]
+            assert (sched.table.free_slots == 0
+                    or sched.table.pages_for(head.budget_tokens)
+                    > sched.alloc.free_pages)
+            return
+        kind, reqs, chunk = work
+        if trace is not None:
+            trace.append((kind, tuple(r.rid for r in reqs), chunk))
+        for r in list(reqs):
+            if kind == "prefill":
+                sched.on_prefill(r, chunk)
+                if r.state != "decode":
+                    continue            # prompt unfinished: no logits used
+            if quarantine_prob and rng.random() < quarantine_prob:
+                sched.quarantine(r)
+                continue
+            sched.on_token(r, rng.randrange(1000))
+        if table is not None:
+            _check_no_aliasing(table, alloc)
+
+
+def _churn(seed: int, n_requests: int, *, quarantine_prob: float) -> None:
+    rng = random.Random(seed)
+    sched, table, alloc = _make_sched()
+    for _ in range(n_requests):
+        plen = rng.randint(1, 8)
+        gen = rng.randint(1, 8)         # budget <= 15 tokens <= 4 pages
+        sched.submit(np.asarray(rng.choices(range(100), k=plen), np.int32),
+                     gen)
+    _drive(sched, rng, quarantine_prob=quarantine_prob,
+           table=table, alloc=alloc)
+    # drained: every page back on the free list, every slot recycled,
+    # every table row reset to the null page
+    assert sched.idle
+    assert len(sched.done) == n_requests
+    assert alloc.free_pages == alloc.num_pages - 1
+    assert alloc._owned == set()
+    assert table.free_slots == table.max_slots
+    assert (table.table == NULL_PAGE).all()
+    assert (table.length == 0).all()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_no_page_leaks_or_aliasing_under_churn(seed):
+    _churn(seed, n_requests=20, quarantine_prob=0.0)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_no_page_leaks_with_random_quarantine(seed):
+    """Mid-flight eviction (the NaN-guard path) must conserve pages too."""
+    _churn(seed, n_requests=20, quarantine_prob=0.25)
+
+
+def test_hypothesis_churn():
+    """Property search over (seed, load, eviction rate) when hypothesis is
+    available (CI installs it; the container may not)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=50, deadline=None)
+    @hyp.given(st.integers(0, 2 ** 31 - 1), st.integers(1, 40),
+               st.sampled_from([0.0, 0.1, 0.5, 1.0]))
+    def prop(seed, n_requests, q):
+        _churn(seed, n_requests, quarantine_prob=q)
+
+    prop()
+
+
+def test_scheduler_determinism():
+    """Same submissions in the same order -> the same tick sequence
+    (kind, rids, chunk), bit for bit — required for the traffic A/B's
+    parity gate to be meaningful."""
+    traces = []
+    for _ in range(2):
+        rng = random.Random(7)
+        sched, table, alloc = _make_sched()
+        for _ in range(15):
+            plen = rng.randint(1, 8)
+            sched.submit(np.asarray(rng.choices(range(100), k=plen),
+                                    np.int32), rng.randint(1, 8))
+        trace: list = []
+        _drive(sched, rng, table=table, alloc=alloc, trace=trace)
+        traces.append(trace)
+    assert traces[0] == traces[1]
+    assert len(traces[0]) > 0
+
+
+def test_admission_reserves_full_budget():
+    """A request whose budget can never fit a slot is rejected at submit
+    (FIFO admission would otherwise livelock behind it); one that fits
+    the slot but not the *currently free* pages waits without leaking."""
+    sched, table, alloc = _make_sched(max_slots=2, max_pages_per_slot=2,
+                                      page_size=4, num_pages=16)
+    with pytest.raises(ValueError, match="per-slot capacity"):
+        sched.submit(np.zeros((6,), np.int32), 4)  # budget 9 > 2*4 rows
+    assert not sched.waiting and alloc.free_pages == 15
+    # transient page pressure: second request waits, nothing leaks
+    alloc.alloc(13)                                # only 2 pages left
+    sched.submit(np.zeros((4,), np.int32), 5)      # budget 8 -> 2 pages
+    sched.submit(np.zeros((4,), np.int32), 5)
+    assert len(sched.admit()) == 1
+    assert len(sched.waiting) == 1                 # head waits, no crash
+    assert alloc.free_pages == 0
+
+
+def test_allocator_rejects_double_free_and_null_page():
+    alloc = PageAllocator(6)
+    pages = alloc.alloc(3)
+    alloc.free(pages[:1])
+    with pytest.raises(ValueError, match="double free"):
+        alloc.free(pages[:1])
+    with pytest.raises(ValueError, match="reserved"):
+        alloc.free([NULL_PAGE])
+    with pytest.raises(OutOfPages):
+        alloc.alloc(99)
+
+
+# ---------------------------------------------------------------------------
+# engine layer (real model; small smoke config)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    import dataclasses
+    import jax
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    cfg = dataclasses.replace(get_smoke("olmo-1b"), sparse_serving=True)
+    bundle = build_model(cfg)
+    return cfg, bundle, bundle.init(jax.random.key(0))
+
+
+def _mixed_requests(rng, n, vocab):
+    return [(np.asarray(rng.integers(0, vocab, rng.integers(2, 7)),
+                        np.int32), int(rng.integers(1, 5))) for _ in range(n)]
+
+
+def test_paged_logits_parity_with_contiguous(olmo):
+    """The acceptance gate: the paged pool is a pure rearrangement of the
+    contiguous cache, so per-request logits traces must match *bitwise*
+    (max abs diff exactly 0) and greedy tokens must be identical."""
+    cfg, bundle, params = olmo
+    rng = np.random.default_rng(0)
+    reqs = _mixed_requests(rng, 5, cfg.vocab_size)
+    max_len = 12                # covers plen 6 + gen 4 budgets, pow2-free
+    shared: dict = {}
+    paged = ServingEngine(bundle, params, num_pages=2 * 3 + 1, page_size=4,
+                          max_slots=2, max_pages_per_slot=3,
+                          prefill_chunk=3, record_logits=True,
+                          step_cache=shared)
+    contig = contiguous_engine(bundle, params, max_slots=2, max_len=max_len,
+                               prefill_chunk=3, record_logits=True)
+    for eng in (paged, contig):
+        for prompt, gen in reqs:
+            eng.submit(prompt, gen)
+        eng.run()
+    toks_p = {r.rid: r.out_tokens for r in paged.sched.done}
+    toks_c = {r.rid: r.out_tokens for r in contig.sched.done}
+    assert toks_p == toks_c
+    assert all(len(t) > 0 for t in toks_p.values())
+    diff = 0.0
+    for rid, rows in paged.logits_trace.items():
+        ref = contig.logits_trace[rid]
+        assert len(rows) == len(ref)
+        diff = max(diff, max(float(np.max(np.abs(a - b)))
+                             for a, b in zip(rows, ref)))
+    assert diff == 0.0
+    # and the engine drained clean: no leaked pages on either side
+    for eng in (paged, contig):
+        assert eng.alloc.free_pages == eng.alloc.num_pages - 1
+        assert (eng.table.table == NULL_PAGE).all()
+
+
+def test_quarantine_poisoned_request_keeps_batch_serving(olmo):
+    """Poison one request's cached KV rows mid-flight (NaN, as a kernel
+    fault would leave them): exactly that request is quarantined, its
+    pages are wiped before reuse (a masked NaN still poisons attention
+    via 0 * NaN), and every other request finishes its full budget."""
+    import jax.numpy as jnp
+    cfg, bundle, params = olmo
+    rng = np.random.default_rng(1)
+    prompts = [np.asarray(rng.integers(0, cfg.vocab_size, 4), np.int32)
+               for _ in range(3)]
+    eng = ServingEngine(bundle, params, num_pages=3 * 3 + 1, page_size=4,
+                        max_slots=3, max_pages_per_slot=3, prefill_chunk=4)
+    eng.decode_fuse = 1      # tick-by-tick so the poison lands mid-decode
+    victim = eng.submit(prompts[0], 6)
+    others = [eng.submit(p, 6) for p in prompts[1:]]
+    # prefill everyone (first token from prefill logits) + one decode step
+    for _ in range(2):
+        eng.tick()
+    assert victim.state == "decode"
+    # poison the victim's live cache planes
+    pages = [int(p) for p in eng.table.table[victim.slot] if p != NULL_PAGE]
+    assert pages
+    planes = np.array([p * eng.kh + h for p in pages for h in range(eng.kh)])
+    eng.pool = {k: v.at[:, planes].set(jnp.nan) for k, v in eng.pool.items()}
+    eng.run()
+    assert victim.state == "quarantined"
+    assert any(e["event"] == "request_quarantine" and e["rid"] == victim.rid
+               for e in eng.events)
+    for r in others:
+        assert r.state == "finished" and len(r.out_tokens) == 6
+    # pool is finite again (wiped on eviction) and no pages leaked
+    for leaf in eng.pool.values():
+        assert bool(jnp.isfinite(leaf).all())
+    assert eng.alloc.free_pages == eng.alloc.num_pages - 1
