@@ -26,6 +26,14 @@ scatter-densify+dot baseline the fallback used to pay per token, plus
 column-combining packing density (KB before/after `pack_columns`, per-block
 occupancy) for each pattern.
 
+A ``quant`` section times the block-quantized tile formats (int8 / int4
+per-block absmax scales, DESIGN.md §13) against the same shape's f32 tiled
+path, checks each quant row's parity against the f32 *dequant reference*
+(``x @ dequantize(W).T`` — identical reconstructed values, so rtol 1e-5
+like every other parity gate here), and reports the storage shrink.  One
+reduced-shape interpret-mode row additionally runs the in-VMEM dequant
+Pallas kernel itself.
+
 Writes ``BENCH_kernels.json`` at the repo root so later PRs have a measured
 trajectory to beat.  ``--smoke`` runs a <60 s subset for CI regression
 gating.
@@ -54,8 +62,10 @@ from jax.experimental import pallas as pl                     # noqa: E402
 from repro.core.pruning import to_balanced_sparse             # noqa: E402
 from repro.kernels import ops, ref                            # noqa: E402
 from repro.kernels.autotune import bench_time as timeit       # noqa: E402
-from repro.kernels.tile_format import (invert_perm,           # noqa: E402
-                                       max_block_count, pack_columns)
+from repro.kernels.tile_format import (encode_tiled,          # noqa: E402
+                                       invert_perm, max_block_count,
+                                       pack_columns, quantize_tiled,
+                                       tiled_storage_bits, tiled_to_dense)
 from repro.models.cnn import (alexnet_layers, resnet50_layers,  # noqa: E402
                               vgg16_layers)
 
@@ -278,6 +288,80 @@ def bench_decode(shapes, *, iters) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Quantized tile rows: int8/int4 block quant vs the f32 tiled path
+# ---------------------------------------------------------------------------
+
+# (m, n, o) — prefill-shaped plus one decode-shaped row; k = n // 2.
+QUANT_SHAPES = {"smoke": [(32, 512, 512)],
+                "full": [(128, 1024, 1024), (4, 1024, 1024)]}
+
+
+def bench_quant(shapes, *, iters, interp_m) -> dict:
+    """Block-quantized tiles (`tile_format.quantize_tiled`) through the
+    same `ops.tiled_spmm` entry as the f32 rows.  Parity is gated against
+    the dequant reference (the values the kernel reconstructs in VMEM),
+    not the pre-quant f32 weights — quantization error is the format's
+    contract (<= scale/2 per element), not a kernel defect.  Speedup and
+    the storage ratio are reported against the f32 tiled row."""
+    impl = "pallas" if _PALLAS_COMPILED else "xla"
+    rows = []
+    for si, (m, n, o) in enumerate(shapes):
+        k = max(8, n // 2)
+        key = zlib.crc32(f"quant/{m}x{n}x{o}".encode()) % (1 << 31)
+        x = jax.random.normal(jax.random.key(key), (m, n), jnp.float32)
+        w = jax.random.normal(jax.random.key(key + 1), (o, n), jnp.float32)
+        sp = to_balanced_sparse(w, k=k)
+        blk = ops.choose_blocks(m, o, n, k)
+        tb = encode_tiled(sp.values, sp.indices, n, bn=blk.bn)
+        f_run = jax.jit(lambda a, t: ops.tiled_spmm(a, t, impl=impl))
+        t_f32 = timeit(f_run, x, tb, iters=iters)
+        bits_f32 = tiled_storage_bits(tb, elem_bits=32)
+        row = {"m": m, "n": n, "o": o, "k": k, "bn": blk.bn,
+               "times_s": {"tiled_f32": t_f32}, "quant": {}}
+        for qm in ("int8", "int4"):
+            qt = quantize_tiled(tb, qm)
+            t_q = timeit(f_run, x, qt, iters=iters)
+            got = np.asarray(f_run(x, qt))
+            want = np.asarray(x @ tiled_to_dense(qt).T)
+            err = float(np.max(np.abs(got - want))
+                        / max(np.max(np.abs(want)), 1e-9))
+            cell = {"rel_err_vs_dequant_ref": err,
+                    "parity_ok": bool(err < 1e-5),
+                    "speedup_vs_f32_tiled": t_f32 / max(t_q, 1e-12),
+                    "storage_ratio_vs_f32":
+                        bits_f32 / tiled_storage_bits(qt)}
+            row["times_s"][f"tiled_{qm}"] = t_q
+            # one reduced-shape pass through the Pallas kernel itself
+            # (interpret mode on CPU): the in-VMEM dequant formulation
+            if si == 0:
+                xs = x[:min(m, interp_m)]
+                got_p = np.asarray(ops.tiled_spmm(xs, qt, impl="pallas"))
+                want_p = np.asarray(xs @ tiled_to_dense(qt).T)
+                perr = float(np.max(np.abs(got_p - want_p))
+                             / max(np.max(np.abs(want_p)), 1e-9))
+                cell["pallas_interp_rel_err"] = perr
+                cell["parity_ok"] = cell["parity_ok"] and perr < 1e-5
+            row["quant"][qm] = cell
+            print(f"  quant     M={m:5d} N={n:5d} O={o:4d} {qm:5s} "
+                  f"f32={t_f32 * 1e3:8.2f}ms {qm}={t_q * 1e3:8.2f}ms "
+                  f"x{cell['speedup_vs_f32_tiled']:5.2f}  "
+                  f"[err {err:.1e}  {cell['storage_ratio_vs_f32']:.2f}x "
+                  f"smaller]")
+        rows.append(row)
+    geo = {}
+    for qm in ("int8", "int4"):
+        ups = [r["quant"][qm]["speedup_vs_f32_tiled"] for r in rows]
+        geo[qm] = float(np.exp(np.mean(np.log(ups)))) if ups else None
+    return {
+        "rows": rows,
+        "geomean_speedup_vs_f32_tiled": geo,
+        "parity_all_ok": bool(all(c["parity_ok"]
+                                  for r in rows
+                                  for c in r["quant"].values())),
+    }
+
+
 # The main timing column compares real compiled code: on TPU
 # (REPRO_PALLAS_INTERPRET=0) that is the Mosaic-compiled tiled kernel; on
 # CPU it is the tiled path's XLA fallback (interpret mode is an emulator —
@@ -313,6 +397,10 @@ def main(argv=None):
     print("decode:")
     decode = bench_decode(
         DECODE_SHAPES["smoke" if args.smoke else "full"], iters=iters)
+    print("quant:")
+    quant = bench_quant(
+        QUANT_SHAPES["smoke" if args.smoke else "full"], iters=iters,
+        interp_m=pallas_m)
     report = {
         "meta": {
             "bench": "balanced_spmm seed-gather vs tiled decode-and-matmul",
@@ -324,6 +412,7 @@ def main(argv=None):
         },
         "networks": results,
         "decode": decode,
+        "quant": quant,
     }
     report["meta"]["wall_s"] = round(time.time() - t0, 2)
     pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
@@ -332,12 +421,15 @@ def main(argv=None):
     vgg = results["vgg16"]
     parity = all(r.get("pallas_ok", True)
                  for n in results.values() for r in n["layers"]) \
-        and decode["parity_all_ok"]
+        and decode["parity_all_ok"] and quant["parity_all_ok"]
     faster = (vgg["geomean_speedup_tiled_vs_seed"] or 0) > 1.0 \
         and decode["all_rows_faster"]
     print(f"vgg16 geomean speedup: {vgg['geomean_speedup_tiled_vs_seed']:.2f}"
           f"  decode geomean vs scatter+dot: "
           f"{decode['geomean_speedup_decode_vs_scatter_dot']:.2f}"
+          f"  quant int8/int4 vs f32 tiled: "
+          f"{quant['geomean_speedup_vs_f32_tiled']['int8']:.2f}/"
+          f"{quant['geomean_speedup_vs_f32_tiled']['int4']:.2f}"
           f"  parity: {'ok' if parity else 'FAIL'}")
     # smoke is a correctness/regression gate (shapes too small to be
     # perf-representative); full mode also gates on the VGG-16 speedup and

@@ -25,6 +25,12 @@ continuous runtime must beat the static loop on sustained tok/s and p50
 latency — both sides run the same kernels, so the A/B is
 machine-independent in sign.
 
+Quant-eligible archs (``QUANT_ARCHS``) also get a block-quantized sparse
+cell (``--quant``, default int8; DESIGN.md §13): the same plan with
+int8/int4 tile-local quantization, parity-checked against its own dequant
+reference and timed as a third parameterization, with ratio columns
+against both masked-dense and the f32 sparse plan.
+
 Writes ``BENCH_serve.json`` at the repo root: the serving perf trajectory
 later PRs must beat (see DESIGN.md §6 for the schema and contract).
 ``--smoke`` is the CI regression gate (registered as a slow-marked pytest,
@@ -39,6 +45,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import pathlib
 import sys
 import time
@@ -52,11 +59,16 @@ import numpy as np                                            # noqa: E402
 from repro.configs import get_smoke                           # noqa: E402
 from repro.engine import execute as engine_execute            # noqa: E402
 from repro.engine import plan as engine_plan                  # noqa: E402
-from repro.kernels.autotune import bench_time as _timed       # noqa: E402
 from repro.launch.serve import _parity_check, traffic_mode    # noqa: E402
 from repro.models import build_model                          # noqa: E402
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# floor on each timed unit in _time_modes: passes repeat until the window
+# is at least this long, so one ~10 ms scheduler preemption cannot swing a
+# cell 2x (smoke-dim passes are themselves ~10 ms); decode cells
+# needed the full 100 ms before run-to-run ratios settled.
+_MIN_WINDOW_S = 0.1
 
 # the committed continuous-vs-static traffic scenario (see launch/serve.py
 # traffic_mode): saturating arrivals so the A/B is a throughput race, the
@@ -72,33 +84,94 @@ TRAFFIC_SCENARIO = dict(requests=24, rate=200.0, prompt_len=12,
 SMOKE_ARCHS = ("olmo-1b", "deepseek-moe-16b", "rwkv6-3b")
 FULL_ARCHS = SMOKE_ARCHS + ("zamba2-1.2b",)
 
+# archs that additionally get a block-quantized sparse cell (--quant,
+# DESIGN.md §13): the dense-transformer prefill story and the MoE decode
+# story — the two cells the quant format is meant to move.
+QUANT_ARCHS = ("olmo-1b", "deepseek-moe-16b")
 
-def _decode_tokens_per_s(bundle, decode_fn, params, prompt, steps: int,
-                         max_len: int) -> float:
-    """Steady-state decode throughput: ``steps`` single-token steps against
-    a full-length cache (compile excluded via a warmup step)."""
+
+def _time_modes(bundle, prefill_fn, decode_fn, entries, prompt, steps: int,
+                max_len: int, rounds: int) -> dict:
+    """Paired interleaved timing of every parameterization in ``entries``
+    (``[(mode_name, params), ...]``): per round, each mode runs one prefill
+    pass and one ``steps``-step decode loop, and the best round wins
+    (compile excluded via an untimed warmup of both executables).
+
+    The interleaving is the point: host slow phases on a shared box last
+    seconds-to-minutes, so timing each mode in its own sequential block
+    confounds the speedup *ratios* — the cells the committed report gates
+    on — with whichever phase that block landed in.  Round-robin puts
+    every mode inside the same phase each round, so drift cancels from
+    the ratio, and best-of-``rounds`` strips the additive noise the same
+    way ``bench_time`` does.  Each timed unit repeats its pass until the
+    window reaches ``_MIN_WINDOW_S`` (a single prefill or 16-step decode
+    loop at smoke dims is ~10 ms — the same scale as a scheduler
+    preemption quantum, so unrepeated cells swing 2x run-to-run); the
+    recorded time is per pass.  Decode re-steps the same cache slots
+    each repeat (value-identical, only the timing differs)."""
     b = prompt.shape[0]
-    cache = bundle.init_cache(b, max_len)
     toks = prompt[:, :1]
     clen = jnp.full((b,), prompt.shape[1], jnp.int32)
-    # warmup = compile of the decode executable for this params pytree
-    logits, cache = decode_fn(params, {"tokens": toks, "cache_len": clen},
-                              cache)
-    jax.block_until_ready(logits)
-    t0 = time.perf_counter()
-    for i in range(steps):
-        logits, cache = decode_fn(params, {"tokens": toks,
-                                           "cache_len": clen + 1 + i}, cache)
-    jax.block_until_ready(logits)
-    dt = time.perf_counter() - t0
-    return b * steps / dt
+
+    def _dec_loop(p, cache):
+        for i in range(steps):
+            logits, cache = decode_fn(p, {"tokens": toks,
+                                          "cache_len": clen + 1 + i}, cache)
+        jax.block_until_ready(logits)
+        return cache
+
+    state = {}
+    for mode, p in entries:
+        jax.block_until_ready(prefill_fn(p, {"tokens": prompt}))   # compile
+        cache = bundle.init_cache(b, max_len)
+        logits, cache = decode_fn(p, {"tokens": toks, "cache_len": clen},
+                                  cache)
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        jax.block_until_ready(prefill_fn(p, {"tokens": prompt}))
+        rough_pre = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cache = _dec_loop(p, cache)
+        rough_dec = time.perf_counter() - t0
+        state[mode] = {
+            "p": p, "cache": cache, "pre": math.inf, "dec": math.inf,
+            "reps_pre": max(1, math.ceil(_MIN_WINDOW_S / max(rough_pre,
+                                                             1e-9))),
+            "reps_dec": max(1, math.ceil(_MIN_WINDOW_S / max(rough_dec,
+                                                             1e-9))),
+        }
+    for _ in range(rounds):
+        for mode, _ in entries:
+            s = state[mode]
+            t0 = time.perf_counter()
+            for _ in range(s["reps_pre"]):
+                jax.block_until_ready(prefill_fn(s["p"], {"tokens": prompt}))
+            s["pre"] = min(s["pre"],
+                           (time.perf_counter() - t0) / s["reps_pre"])
+            cache = s["cache"]
+            t0 = time.perf_counter()
+            for _ in range(s["reps_dec"]):
+                cache = _dec_loop(s["p"], cache)
+            s["dec"] = min(s["dec"],
+                           (time.perf_counter() - t0) / s["reps_dec"])
+            s["cache"] = cache
+    return {mode: {"prefill_s": s["pre"],
+                   "prefill_tokens_per_s": b * prompt.shape[1] / s["pre"],
+                   "decode_tokens_per_s": b * steps / s["dec"]}
+            for mode, s in state.items()}
 
 
 def bench_arch(arch: str, *, batch: int, prompt_len: int, gen_steps: int,
                prefill_iters: int, sparsity: float, tune: str,
-               tune_cache: str | None) -> dict:
+               tune_cache: str | None, quant: str = "none") -> dict:
     """One (arch) cell: plan once, verify parity + dispatch, then time
-    prefill and decode for masked-dense vs sparse-plan params."""
+    prefill and decode for masked-dense vs sparse-plan params — all
+    parameterizations interleaved round-robin through ``_time_modes`` so
+    host drift cancels out of the speedup ratios.  When
+    ``quant != "none"`` a third parameterization — the same plan with
+    block-quantized tiles — is verified (parity vs its own dequant
+    reference, quant dispatch ticked in STATS) and timed, adding a
+    ``sparse_plan_{quant}`` block and ``speedup_{quant}_vs_*`` ratios."""
     cfg = dataclasses.replace(get_smoke(arch), sparse_serving=True)
     bundle = build_model(cfg)
     params = bundle.init(jax.random.key(0))
@@ -139,22 +212,46 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, gen_steps: int,
                                  for nm, t, s in plan.tune_deltas()]},
         "engine_stats": stats,
     }
-    for mode, p in (("masked_dense", ref_params),
-                    ("sparse_plan", sparse_params)):
-        t_pre = _timed(prefill_fn, p, {"tokens": prompt},
-                       iters=prefill_iters)
-        pre_tps = batch * prompt_len / t_pre
-        dec_tps = _decode_tokens_per_s(bundle, decode_fn, p, prompt,
-                                       gen_steps, max_len)
-        cell[mode] = {"prefill_tokens_per_s": pre_tps,
-                      "prefill_s": t_pre,
-                      "decode_tokens_per_s": dec_tps}
-        print(f"  {arch:18s} {mode:12s} prefill {pre_tps:9.1f} tok/s   "
-              f"decode {dec_tps:9.1f} tok/s")
+    entries = [("masked_dense", ref_params), ("sparse_plan", sparse_params)]
+
+    if quant != "none":
+        plan_q = engine_plan.plan_model(cfg, params, sparsity=sparsity,
+                                        m_hint=batch * prompt_len,
+                                        decode_m=batch, tune=tune,
+                                        tune_cache=tune_cache, quant=quant)
+        sparse_q = {**params, "sparse_plan": plan_q}
+        # parity vs the quant plan's own dequant reference (quantization
+        # error is the format's contract, round-off is the kernel's)
+        ref_q = engine_plan.masked_dense_params(params, plan_q)
+        engine_execute.reset_stats()
+        diff_q = _parity_check(prefill_fn, sparse_q, ref_q, prompt,
+                               tol=max(tol, 5e-2))
+        qstats = engine_execute.stats()
+        assert qstats.get(f"quant_{quant}", 0) > 0, \
+            f"{arch}: {quant} path never dispatched ({qstats})"
+        cell["quant"] = quant
+        entries.append((f"sparse_plan_{quant}", sparse_q))
+
+    times = _time_modes(bundle, prefill_fn, decode_fn, entries, prompt,
+                        gen_steps, max_len, rounds=prefill_iters)
+    for mode, _ in entries:
+        cell[mode] = dict(times[mode])
+        print(f"  {arch:18s} {mode:24s} prefill "
+              f"{cell[mode]['prefill_tokens_per_s']:9.1f} tok/s   decode "
+              f"{cell[mode]['decode_tokens_per_s']:9.1f} tok/s")
+    if quant != "none":
+        cell[f"sparse_plan_{quant}"]["parity_max_abs_diff"] = diff_q
+        cell[f"sparse_plan_{quant}"]["engine_stats"] = qstats
     for phase in ("prefill", "decode"):
         key = f"{phase}_tokens_per_s"
         cell[f"speedup_sparse_vs_dense_{phase}"] = (
             cell["sparse_plan"][key] / max(cell["masked_dense"][key], 1e-12))
+        if quant != "none":
+            q_tps = cell[f"sparse_plan_{quant}"][key]
+            cell[f"speedup_{quant}_vs_dense_{phase}"] = (
+                q_tps / max(cell["masked_dense"][key], 1e-12))
+            cell[f"speedup_{quant}_vs_f32_sparse_{phase}"] = (
+                q_tps / max(cell["sparse_plan"][key], 1e-12))
     return cell
 
 
@@ -206,30 +303,67 @@ def traffic_gate_failures(cell: dict) -> list:
     return fails
 
 
+def _merge_cells(old: dict, new: dict) -> dict:
+    """Element-wise best of two passes of the same arch cell: per mode
+    block, keep the faster prefill and decode; then recompute every
+    ``speedup_*`` ratio from the merged absolutes.  Non-timing keys
+    (parity, plan, engine stats) keep the first pass's values — they are
+    deterministic per plan, only the clocks differ."""
+    merged = dict(old)
+    modes = [m for m in old
+             if isinstance(old.get(m), dict) and "prefill_s" in old[m]]
+    for m in modes:
+        blk = dict(old[m])
+        blk["prefill_s"] = min(old[m]["prefill_s"], new[m]["prefill_s"])
+        for k in ("prefill_tokens_per_s", "decode_tokens_per_s"):
+            blk[k] = max(old[m][k], new[m][k])
+        merged[m] = blk
+    quant = old.get("quant")
+    for phase in ("prefill", "decode"):
+        key = f"{phase}_tokens_per_s"
+        merged[f"speedup_sparse_vs_dense_{phase}"] = (
+            merged["sparse_plan"][key]
+            / max(merged["masked_dense"][key], 1e-12))
+        if quant:
+            q_tps = merged[f"sparse_plan_{quant}"][key]
+            merged[f"speedup_{quant}_vs_dense_{phase}"] = (
+                q_tps / max(merged["masked_dense"][key], 1e-12))
+            merged[f"speedup_{quant}_vs_f32_sparse_{phase}"] = (
+                q_tps / max(merged["sparse_plan"][key], 1e-12))
+    return merged
+
+
 def compare_reports(new: dict, committed: dict, *, tol: float = 0.05) -> list:
-    """Regression check against a committed report: every sparse-vs-dense
-    speedup cell in ``committed`` must be matched within ``tol`` (5%
-    default) by the fresh run.  Speedup *ratios* are compared, not tok/s —
-    machine speed cancels out of the ratio, so a committed report from one
-    container is comparable to a fresh run on another as long as both used
-    the same mode (shapes).  Returns a list of regression strings (empty ==
-    pass); archs or cells present only on one side are skipped (coverage is
-    the main gate's job, not the comparator's).
+    """Regression check against a committed report: every speedup ratio
+    cell in ``committed`` — the sparse-vs-dense prefill/decode columns and,
+    when the committed report carries them, the quant ratio columns — must
+    be matched within ``tol`` (5% default) by the fresh run.  Speedup
+    *ratios* are compared, not tok/s — machine speed cancels out of the
+    ratio, so a committed report from one container is comparable to a
+    fresh run on another as long as both used the same mode (shapes).
+    Returns a list of regression strings (empty == pass); archs or cells
+    present only on one side are skipped (coverage is the main gate's job,
+    not the comparator's) — so a fresh quant-bearing run compares cleanly
+    against an older baseline that predates the quant column, and vice
+    versa.
     """
     regressions = []
     for arch, old_cell in (committed.get("archs") or {}).items():
         new_cell = (new.get("archs") or {}).get(arch)
         if not new_cell:
             continue
-        for phase in ("prefill", "decode"):
-            key = f"speedup_sparse_vs_dense_{phase}"
+        keys = sorted(k for k, v in old_cell.items()
+                      if k.startswith("speedup_")
+                      and isinstance(v, (int, float)))
+        for key in keys:
             old_v, new_v = old_cell.get(key), new_cell.get(key)
             if old_v is None or new_v is None:
                 continue
             if new_v < old_v * (1.0 - tol):
                 regressions.append(
-                    f"{arch} {phase}: speedup {new_v:.4f} < committed "
-                    f"{old_v:.4f} - {tol:.0%} tolerance")
+                    f"{arch} {key.removeprefix('speedup_')}: speedup "
+                    f"{new_v:.4f} < committed {old_v:.4f} - {tol:.0%} "
+                    f"tolerance")
     return regressions
 
 
@@ -255,6 +389,13 @@ def main(argv=None):
                     help="block-choice policy for the plans under test "
                          "(kernels.autotune; bites on the pallas impl)")
     ap.add_argument("--tune-cache", default=None)
+    ap.add_argument("--quant", choices=["none", "int8", "int4"],
+                    default="int8",
+                    help="block-quantized sparse cells for the QUANT_ARCHS "
+                         "(olmo-1b prefill, deepseek-moe decode): adds a "
+                         "sparse_plan_<quant> block per cell plus "
+                         "speedup_<quant>_vs_{dense,f32_sparse} ratio "
+                         "columns (--quant none to skip)")
     ap.add_argument("--traffic", default=True,
                     action=argparse.BooleanOptionalAction,
                     help="run the continuous-vs-static traffic A/B cell "
@@ -266,7 +407,7 @@ def main(argv=None):
     if args.smoke:
         archs, batch, plen, steps, iters = SMOKE_ARCHS, 2, 16, 4, 2
     else:
-        archs, batch, plen, steps, iters = FULL_ARCHS, 4, 32, 16, 3
+        archs, batch, plen, steps, iters = FULL_ARCHS, 4, 32, 16, 5
     if args.archs:
         archs = tuple(a for a in args.archs.split(",") if a)
     batch = args.batch or batch
@@ -275,16 +416,27 @@ def main(argv=None):
 
     t0 = time.time()
     results, failures = {}, []
-    for arch in archs:
-        print(f"{arch}:")
-        try:
-            results[arch] = bench_arch(
-                arch, batch=batch, prompt_len=plen, gen_steps=steps,
-                prefill_iters=iters, sparsity=args.sparsity,
-                tune=args.tune, tune_cache=args.tune_cache)
-        except Exception as e:  # noqa: BLE001 - report, keep benching
-            failures.append(f"{arch}: {type(e).__name__}: {e}")
-            print(f"  {arch}: FAILED — {e}")
+    # full mode benches every arch cell several times, spread across the
+    # whole run (outer loop over passes, not archs), and keeps the best-of
+    # per mode: host slow phases last minutes, so per-cell passes minutes
+    # apart give each mode an independent shot at a clean window, and the
+    # merged ratios are ratios of noise-free estimates — stable enough for
+    # the 5% --compare floor, which single-draw ratios are not.
+    cell_passes = 1 if args.smoke else 4
+    for rep in range(cell_passes):
+        for arch in archs:
+            print(f"{arch}{f' (pass {rep + 1}/{cell_passes})' if cell_passes > 1 else ''}:")
+            try:
+                cell = bench_arch(
+                    arch, batch=batch, prompt_len=plen, gen_steps=steps,
+                    prefill_iters=iters, sparsity=args.sparsity,
+                    tune=args.tune, tune_cache=args.tune_cache,
+                    quant=args.quant if arch in QUANT_ARCHS else "none")
+                results[arch] = (cell if arch not in results
+                                 else _merge_cells(results[arch], cell))
+            except Exception as e:  # noqa: BLE001 - report, keep benching
+                failures.append(f"{arch}: {type(e).__name__}: {e}")
+                print(f"  {arch}: FAILED — {e}")
     traffic = None
     if args.traffic:
         print("traffic (continuous batching vs static loop):")
@@ -303,6 +455,7 @@ def main(argv=None):
             "jax": jax.__version__,
             "batch": batch, "prompt_len": plen, "gen_steps": steps,
             "sparsity": args.sparsity, "tune": args.tune,
+            "quant": args.quant, "cell_passes": cell_passes,
             "note": "smoke-scaled configs (CPU container); tok/s are "
                     "trajectory numbers on this backend, not TPU absolutes",
             "failures": failures,

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from ..core.pruning import BalancedSparse
 from ..kernels import ops as kernel_ops
 from ..kernels.sparse_conv import sparse_conv2d as _sparse_conv2d
-from ..kernels.tile_format import TiledBalanced, tiled_to_flat
+from ..kernels.tile_format import (TiledBalanced, dequantize_tiled,
+                                   tiled_to_flat)
 from .plan import LayerPlan, ModelPlan
 
 Array = jax.Array
@@ -62,6 +63,8 @@ def _count_dispatch(spec, *extra: str) -> None:
         STATS["tuned_blocks"] += 1
     if spec.degraded_from:
         STATS["degraded_dispatch"] += 1
+    if spec.quant != "none":
+        STATS[f"quant_{spec.quant}"] += 1
     for name in extra:
         STATS[name] += 1
 
@@ -82,6 +85,10 @@ def _tiled_to_flat_stacked(w: TiledBalanced):
     the balance invariant), decode flat, restack.  Packed encodings pass
     their (lead-broadcast, identical per slice) perm through so the flat
     indices come out in original column order, ascending."""
+    if w.quant != "none":
+        # decode the narrow values back to f32 first: the flat format has
+        # no tile-local scale slot to carry them
+        w = dequantize_tiled(w)
     lead = w.values.shape[:-3]
     perm = w.perm
     if perm is not None and perm.ndim > 1:
@@ -124,8 +131,15 @@ def demote_layer(lp: LayerPlan, *, to_impl: str | None = None,
         new_spec = dataclasses.replace(spec, impl="dense", k=spec.n_in,
                                        blocks=None, block_k=0,
                                        blocks_decode=None, packed=False,
-                                       degraded_from=origin)
+                                       quant="none", degraded_from=origin)
         return LayerPlan(spec=new_spec, weights=weights)
+    if isinstance(lp.weights, TiledBalanced) and spec.quant != "none":
+        # quantized encodings keep the tiled format on every sparse rung —
+        # the per-block scales live tile-locally, and `tiled_spmm` routes
+        # xla / xla_gather on them directly
+        return LayerPlan(spec=dataclasses.replace(spec, impl=to_impl,
+                                                  degraded_from=origin),
+                         weights=lp.weights)
     if isinstance(lp.weights, TiledBalanced):
         vals, idx = _tiled_to_flat_stacked(lp.weights)
         weights: Any = BalancedSparse(vals, idx, spec.n_in)
@@ -165,12 +179,14 @@ def apply_fc(x: Array, lp: LayerPlan) -> Array:
         m *= d
     skinny = m <= kernel_ops.SKINNY_M
     _count_dispatch(spec, *(("decode_dispatch",) if skinny else ()))
-    if spec.impl == "pallas":
+    if isinstance(lp.weights, TiledBalanced):
+        # pallas plans, plus quantized xla/xla_gather plans (the tiled
+        # format carries the per-block scales; `tiled_spmm` routes impl)
         blk = spec.blocks_decode if skinny and spec.blocks_decode \
             else spec.blocks
         bm = min(blk.bm, max(8, kernel_ops.bucket_m(m)))
         return kernel_ops.tiled_spmm(x, lp.weights, block_m=bm,
-                                     block_o=blk.bo)
+                                     block_o=blk.bo, impl=spec.impl)
     sp = lp.weights
     return kernel_ops.balanced_spmm(x, sp.values, sp.indices, n_in=spec.n_in,
                                     impl=spec.impl, block_k=spec.block_k)
@@ -203,13 +219,13 @@ def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
     skinny = m <= kernel_ops.SKINNY_M
     _count_dispatch(spec, "expert_balanced_spmm",
                     *(("decode_dispatch",) if skinny else ()))
-    if spec.impl == "pallas":
+    if isinstance(lp.weights, TiledBalanced):
         blk = spec.blocks_decode if skinny and spec.blocks_decode \
             else spec.blocks
         # same live-M clamp as apply_fc: m here is per-expert capacity
         bm = min(blk.bm, max(8, kernel_ops.bucket_m(m)))
         return kernel_ops.tiled_spmm_batched(x, lp.weights, block_m=bm,
-                                             block_o=blk.bo)
+                                             block_o=blk.bo, impl=spec.impl)
     sp = lp.weights
     return kernel_ops.balanced_spmm_batched(x, sp.values, sp.indices,
                                             n_in=spec.n_in, impl=spec.impl)
@@ -231,13 +247,13 @@ def apply_conv(x: Array, lp: LayerPlan) -> Array:
             (spec.stride, spec.stride), pad,
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
     _count_dispatch(spec)
-    if spec.impl == "pallas":
+    if isinstance(lp.weights, TiledBalanced):
         tb = lp.weights
         blk = spec.blocks
 
         def matmul_fn(flat, values, indices, n_in):
             return kernel_ops.tiled_spmm(flat, tb, block_m=blk.bm,
-                                         block_o=blk.bo)
+                                         block_o=blk.bo, impl=spec.impl)
         vals, idx = tb.values, tb.indices
     else:
         sp = lp.weights

@@ -52,8 +52,9 @@ from ..core.pruning import BalancedSparse, keep_count
 from ..core.sparse_ops import SparseLinearSpec
 from ..kernels import autotune
 from ..kernels import ops as kernel_ops
-from ..kernels.tile_format import (_KB_ROUND, _round_up, TiledBalanced,
-                                   encode_tiled, tiled_to_dense)
+from ..kernels.tile_format import (_KB_ROUND, _round_up, QUANT_MODES,
+                                   TiledBalanced, encode_tiled,
+                                   quantize_tiled, tiled_to_dense)
 
 Array = jax.Array
 
@@ -149,6 +150,9 @@ class PlanSpec:
                                     # encoding (TiledBalanced.perm)
     pack_kb: Tuple = ()             # (kb_unpacked, kb_packed) provenance
                                     # when packed
+    quant: str = "none"             # tile-local block-quant mode of the
+                                    # encoding ("none" | "int8" | "int4");
+                                    # always "none" for dense impls
 
     @property
     def is_sparse(self) -> bool:
@@ -199,10 +203,14 @@ class LayerPlan:
                 cf = w.counts.reshape(-1, *w.counts.shape[-2:])
                 pf = None if w.perm is None else \
                     w.perm.reshape(-1, w.perm.shape[-1])
+                sf = None if w.scales is None else \
+                    w.scales.reshape(-1, *w.scales.shape[-2:])
                 dense = jnp.stack([
                     tiled_to_dense(TiledBalanced(
                         vf[i], jf[i], cf[i], w.n_in, w.bn,
-                        perm=None if pf is None else pf[i]))
+                        perm=None if pf is None else pf[i],
+                        scales=None if sf is None else sf[i],
+                        quant=w.quant))
                     for i in range(vf.shape[0])])
                 return dense.reshape(*lead, *dense.shape[-2:])
             return tiled_to_dense(w)
@@ -392,7 +400,7 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                      dtype=None, stride: int = 1,
                      conv_padding: Any = "SAME", tune: str = "off",
                      tune_cache: str | None = None,
-                     pack: bool = True) -> LayerPlan:
+                     pack: bool = True, quant: str = "none") -> LayerPlan:
     """Derive one LayerPlan from a dense weight (output-major ``[O, N]`` for
     fc, ``[Co, Ci, Hk, Wk]`` for conv) and an optional pruning mask.
 
@@ -413,7 +421,16 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
     `autotune.default_cache_path`) and falls back to the static model on a
     miss, ``"sweep"`` additionally times candidates and persists the winner
     on a miss.  The provenance lands in ``PlanSpec.tuned``.
+
+    ``quant`` selects the tile-local block-quant mode ("none" | "int8" |
+    "int4"): sparse layers encode to `TiledBalanced` (for *every* sparse
+    impl — the quantized scales live tile-locally, so the XLA fallbacks
+    keep the tiled format too) and quantize per bn-block
+    (`tile_format.quantize_tiled`); dense layers ignore it.
     """
+    if quant not in QUANT_MODES:
+        raise ValueError(f"quant must be one of {QUANT_MODES}, "
+                         f"got {quant!r}")
     # Pattern analysis runs in pure NumPy: inside a jit trace every jnp op
     # stages (omnistaging) even on concrete operands, and the pattern must
     # stay host-concrete for the static plan decisions.  Values may trace.
@@ -485,24 +502,26 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
             else masked2
         weights: Any = masked.astype(dt)
         k = n
+        quant = "none"
     else:
         itemsize = jnp.dtype(dt).itemsize
         res = autotune.resolve_blocks(m_hint, o, n, k, itemsize=itemsize,
                                       impl=impl, tune=tune,
-                                      cache_path=tune_cache)
+                                      cache_path=tune_cache,
+                                      dtype=dt, quant=quant)
         blocks, tuned, blocks_static = res.blocks, res.source, res.static
         blocks_decode = autotune.resolve_blocks(
             decode_m, o, n, k, itemsize=itemsize, impl=impl, tune=tune,
-            cache_path=tune_cache).blocks
+            cache_path=tune_cache, dtype=dt, quant=quant).blocks
         idx = _pattern_indices(pattern, k)                # np [O, K] int32
         vals = jnp.take_along_axis(jnp.asarray(masked2),
                                    jnp.asarray(idx), axis=1).astype(dt)
         block_k = max(_KB_ROUND,
                       _round_up(mask_block_k(pattern, bn=blocks.bn),
                                 _KB_ROUND))
-        if impl == "pallas":
+        if impl == "pallas" or quant != "none":
             n_enc, perm = n, None
-            if pack and kind == "fc":
+            if impl == "pallas" and pack and kind == "fc":
                 idx, vals, block_k, n_enc, perm, pack_kb = _maybe_pack(
                     idx, vals, pattern, n, blocks.bn, block_k)
             # np indices keep encode_tiled on its host (concrete) path
@@ -512,6 +531,8 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                                     perm=None if perm is None
                                     else jnp.asarray(perm))
             packed = perm is not None
+            if quant != "none":
+                weights = quantize_tiled(weights, quant)
         else:
             weights = BalancedSparse(vals, idx, n)
 
@@ -523,7 +544,7 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                     conv_padding=conv_padding, tuned=tuned,
                     blocks_static=blocks_static, m_hint=int(m_hint),
                     decode_m=int(decode_m), blocks_decode=blocks_decode,
-                    packed=packed, pack_kb=pack_kb)
+                    packed=packed, pack_kb=pack_kb, quant=quant)
     return LayerPlan(spec=spec, weights=weights)
 
 
@@ -572,7 +593,8 @@ def plan_smallcnn(cfg, params: dict, masks: dict | None = None, *,
                   impl: str | None = None, ifm_sparsity: float = 0.0,
                   weight_buffer_bits: int | None = None,
                   m_hint: int = 4096, tune: str = "off",
-                  tune_cache: str | None = None) -> ModelPlan:
+                  tune_cache: str | None = None,
+                  quant: str = "none") -> ModelPlan:
     """One offline pass over the small CNN: conv layers with balanced masks
     go through the sparse conv path, balanced fc masks through the balanced
     GEMM, everything else stays dense (mask still applied)."""
@@ -589,14 +611,14 @@ def plan_smallcnn(cfg, params: dict, masks: dict | None = None, *,
             name, params[name], mask=masks.get(name), layer_spec=geom,
             m_hint=m_hint, impl=impl, ifm_sparsity=ifm_sparsity,
             weight_buffer_bits=weight_buffer_bits, conv_padding="SAME",
-            tune=tune, tune_cache=tune_cache)
+            tune=tune, tune_cache=tune_cache, quant=quant)
         cin = cout
     for name in ("fc1", "fc2"):
         layers[name] = build_layer_plan(
             name, params[name], mask=masks.get(name), kind="fc",
             m_hint=m_hint, impl=impl, ifm_sparsity=ifm_sparsity,
             weight_buffer_bits=weight_buffer_bits, tune=tune,
-            tune_cache=tune_cache)
+            tune_cache=tune_cache, quant=quant)
     meta = (("model", "smallcnn"),) + _tune_meta(tune, layers)
     return ModelPlan(layers=layers, meta=meta)
 
@@ -619,7 +641,7 @@ ZAMBA2_PROJ_NAMES = ("z_proj", "x_proj", "out_proj")
 def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                   m_hint: int, cd, tune: str = "off",
                   tune_cache: str | None = None, decode_m: int = 4,
-                  pack: bool = True) -> LayerPlan:
+                  pack: bool = True, quant: str = "none") -> LayerPlan:
     """Plan one stacked projection ``[*lead, n_in, n_out]``.
 
     ``lead`` is any tuple of stacked axes — ``(L,)`` for scanned layers,
@@ -639,7 +661,14 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
     perm), adopted only when it shrinks the shared KB; the perm leaf is
     broadcast over the lead axes so per-layer pytree slicing stays
     shape-consistent.
+
+    ``quant`` block-quantizes the encoding per bn-block ("int8" | "int4");
+    every sparse impl then stores `TiledBalanced` (the scales are tile-
+    local, so the XLA fallbacks keep the tiled format too).
     """
+    if quant not in QUANT_MODES:
+        raise ValueError(f"quant must be one of {QUANT_MODES}, "
+                         f"got {quant!r}")
     lead = w.shape[:-2]
     n_in, n_out = w.shape[-2:]
     g = int(np.prod(lead)) if lead else 1
@@ -666,16 +695,19 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
         weights: Any = (wt * masks).reshape(*lead, n_out, n_in)
         blk = None
         block_k = 0
+        quant = "none"
     else:
         itemsize = cd.itemsize
         res = autotune.resolve_blocks(m_hint, n_out, n_in, k,
                                       itemsize=itemsize, impl=impl_nm,
-                                      tune=tune, cache_path=tune_cache)
+                                      tune=tune, cache_path=tune_cache,
+                                      dtype=cd, quant=quant)
         blk, tuned, blk_static = res.blocks, res.source, res.static
         blk_dec = autotune.resolve_blocks(decode_m, n_out, n_in, k,
                                           itemsize=itemsize, impl=impl_nm,
                                           tune=tune,
-                                          cache_path=tune_cache).blocks
+                                          cache_path=tune_cache,
+                                          dtype=cd, quant=quant).blocks
         block_k = max(_KB_ROUND, _round_up(
             mask_block_k(masks.reshape(g * n_out, n_in), bn=blk.bn),
             _KB_ROUND))
@@ -683,9 +715,9 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
         idx = np.sort(np.argsort(~masks, axis=-1, kind="stable")[..., :k],
                       axis=-1).astype(np.int32)           # [g, O, K]
         vals = jnp.take_along_axis(wt, jnp.asarray(idx), axis=-1)
-        if impl_nm == "pallas":
+        if impl_nm == "pallas" or quant != "none":
             n_enc, perm = n_in, None
-            if pack:
+            if impl_nm == "pallas" and pack:
                 idx, vals, block_k, n_enc, perm, pack_kb = _maybe_pack(
                     idx, vals, masks.reshape(g * n_out, n_in), n_in,
                     blk.bn, block_k)
@@ -706,6 +738,8 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                 tb.indices.reshape(*lead, n_out, nb, block_k),
                 tb.counts.reshape(*lead, n_out, nb),
                 n_in=n_in, bn=blk.bn, perm=perm_leaf)
+            if quant != "none":
+                weights = quantize_tiled(weights, quant)
         else:
             weights = BalancedSparse(vals.reshape(*lead, n_out, k),
                                      jnp.asarray(idx).reshape(
@@ -722,7 +756,8 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                     w_mem_bits=int(flow.w_mem) * g,
                     experts=experts, tuned=tuned, blocks_static=blk_static,
                     m_hint=int(m_hint), decode_m=int(decode_m),
-                    blocks_decode=blk_dec, packed=packed, pack_kb=pack_kb)
+                    blocks_decode=blk_dec, packed=packed, pack_kb=pack_kb,
+                    quant=quant)
     return LayerPlan(spec=spec, weights=weights)
 
 
@@ -758,7 +793,8 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
                      include_experts: bool = True,
                      m_hint: int | None = None, decode_m: int | None = None,
                      pack: bool = True, tune: str = "off",
-                     tune_cache: str | None = None) -> ModelPlan:
+                     tune_cache: str | None = None,
+                     quant: str = "none") -> ModelPlan:
     """Offline plan for a transformer's projection matrices.
 
     Stacked 2-D projections ``[L, n_in, n_out]`` go through `_plan_stacked`;
@@ -787,7 +823,7 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
         layers[nm] = _plan_stacked(nm, w, sparsity=sparsity, impl=impl,
                                    m_hint=m_hint, cd=cd, tune=tune,
                                    tune_cache=tune_cache, decode_m=decode_m,
-                                   pack=pack)
+                                   pack=pack, quant=quant)
     if include_mlp and include_experts and cfg.family == "moe":
         for nm in MOE_EXPERT_NAMES:
             w = blocks.get(nm)
@@ -796,17 +832,19 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
             layers[nm] = _plan_stacked(nm, w, sparsity=sparsity, impl=impl,
                                        m_hint=m_hint, cd=cd, tune=tune,
                                        tune_cache=tune_cache,
-                                       decode_m=decode_m, pack=pack)
+                                       decode_m=decode_m, pack=pack,
+                                       quant=quant)
     meta = (("model", cfg.name), ("sparsity", float(sparsity)),
-            ("n_layers", int(cfg.n_layers))) + _tune_meta(tune, layers)
+            ("n_layers", int(cfg.n_layers)),
+            ("quant", quant)) + _tune_meta(tune, layers)
     return ModelPlan(layers=layers, meta=meta)
 
 
 def plan_rwkv6(cfg, params: dict, *, sparsity: float | None = None,
                impl: str | None = None, m_hint: int | None = None,
                decode_m: int | None = None, pack: bool = True,
-               tune: str = "off", tune_cache: str | None = None
-               ) -> ModelPlan:
+               tune: str = "off", tune_cache: str | None = None,
+               quant: str = "none") -> ModelPlan:
     """Offline plan for the RWKV6 projection family (R/K/V/G/O time-mix
     plus channel-mix matrices).  The WKV recurrence itself is elementwise
     and stays dense — the exact analogue of the paper leaving non-CONV/FC
@@ -819,18 +857,19 @@ def plan_rwkv6(cfg, params: dict, *, sparsity: float | None = None,
     layers = {nm: _plan_stacked(nm, blocks[nm], sparsity=sparsity, impl=impl,
                                 m_hint=m_hint, cd=cd, tune=tune,
                                 tune_cache=tune_cache, decode_m=decode_m,
-                                pack=pack)
+                                pack=pack, quant=quant)
               for nm in RWKV6_PROJ_NAMES if nm in blocks}
     meta = (("model", cfg.name), ("sparsity", float(sparsity)),
-            ("n_layers", int(cfg.n_layers))) + _tune_meta(tune, layers)
+            ("n_layers", int(cfg.n_layers)),
+            ("quant", quant)) + _tune_meta(tune, layers)
     return ModelPlan(layers=layers, meta=meta)
 
 
 def plan_zamba2(cfg, params: dict, *, sparsity: float | None = None,
                 impl: str | None = None, m_hint: int | None = None,
                 decode_m: int | None = None, pack: bool = True,
-                tune: str = "off", tune_cache: str | None = None
-                ) -> ModelPlan:
+                tune: str = "off", tune_cache: str | None = None,
+                quant: str = "none") -> ModelPlan:
     """Offline plan for the Zamba2 Mamba-block in/out projections (z/x in,
     out_proj).  The SSD recurrence, depthwise convs and the small B/C/dt
     heads stay dense; the shared attention block is a single (non-stacked)
@@ -843,10 +882,11 @@ def plan_zamba2(cfg, params: dict, *, sparsity: float | None = None,
     layers = {nm: _plan_stacked(nm, blocks[nm], sparsity=sparsity, impl=impl,
                                 m_hint=m_hint, cd=cd, tune=tune,
                                 tune_cache=tune_cache, decode_m=decode_m,
-                                pack=pack)
+                                pack=pack, quant=quant)
               for nm in ZAMBA2_PROJ_NAMES if nm in blocks}
     meta = (("model", cfg.name), ("sparsity", float(sparsity)),
-            ("n_layers", int(cfg.n_layers))) + _tune_meta(tune, layers)
+            ("n_layers", int(cfg.n_layers)),
+            ("quant", quant)) + _tune_meta(tune, layers)
     return ModelPlan(layers=layers, meta=meta)
 
 
@@ -858,8 +898,9 @@ def plan_model(cfg, params: dict, **kwargs) -> ModelPlan:
     forwarded to the family planner unchanged — in particular ``sparsity``,
     ``impl``, ``m_hint``, ``decode_m`` (the decode-step M a second
     decode-shaped BlockChoice is resolved at — pass the serving batch),
-    ``pack`` (column-combining packing), and the measured-autotuning knobs
-    ``tune``
+    ``pack`` (column-combining packing), ``quant`` (tile-local block
+    quantization: "none" | "int8" | "int4"), and the measured-autotuning
+    knobs ``tune``
     (``"off" | "cached" | "sweep"``) and ``tune_cache`` (cache file path);
     ``include_mlp``/``include_experts`` apply to transformer families only
     and are dropped for the recurrent planners.
@@ -921,12 +962,19 @@ def _layer_weight_specs(lp: LayerPlan, mesh):
             # every device permutes the full input row: replicated
             perm_spec = shd.logical_spec(
                 mesh, w.perm.shape, lead_plan(w.perm.ndim - 1) + [None])
+        scales_spec = None
+        if w.scales is not None:
+            # scales shard exactly like counts ([.., O, NB]): per-block
+            # metadata rides with its output-channel shard
+            scales_spec = shd.logical_spec(mesh, w.scales.shape,
+                                           lead_plan(lead) + [fsdp, None])
         return TiledBalanced(
             shd.logical_spec(mesh, w.values.shape, vplan),
             shd.logical_spec(mesh, w.indices.shape, vplan),
             shd.logical_spec(mesh, w.counts.shape,
                              lead_plan(lead) + [fsdp, None]),
-            n_in=w.n_in, bn=w.bn, perm=perm_spec)
+            n_in=w.n_in, bn=w.bn, perm=perm_spec,
+            scales=scales_spec, quant=w.quant)
     if isinstance(w, BalancedSparse):
         lead = w.values.ndim - 2
         vplan = lead_plan(lead) + [fsdp, None]

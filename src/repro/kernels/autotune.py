@@ -36,6 +36,7 @@ from __future__ import annotations
 import contextlib
 import functools
 import json
+import math
 import os
 import pathlib
 import tempfile
@@ -52,7 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ops
-from .tile_format import encode_tiled, max_block_count
+from .tile_format import QUANT_MODES, encode_tiled, max_block_count, \
+    quantize_tiled
 
 CACHE_VERSION = 1
 
@@ -73,17 +75,29 @@ def default_cache_path() -> str:
 
 def cache_key(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
               impl: str = "pallas", backend: str | None = None,
-              vmem_budget: int = ops._VMEM_BUDGET) -> str:
+              vmem_budget: int = ops._VMEM_BUDGET,
+              dtype=None, quant: str = "none") -> str:
     """Versioned cache key.  ``backend`` defaults to the live JAX backend —
     entries swept on one backend are invisible on another (a TPU never
     trusts CPU-interpret timings and vice versa).  ``m`` is bucketed to
     the next power of two (`ops.bucket_m`): the serving runtime's live M
     spread (batch buckets x chunk widths) must share entries per bucket,
-    not fragment the cache per exact M."""
+    not fragment the cache per exact M.
+
+    The key names the weight *dtype*, not just its itemsize: two dtypes
+    can share an itemsize (bf16/f16) yet time differently, and an itemsize
+    alone let a bf16 sweep collide with the f32 entry for the same
+    (m, o, n, k) and silently serve the wrong blocks.  ``quant`` adds a
+    ``|q<mode>`` segment for block-quantized encodings (narrower weight
+    slots change the VMEM frontier, so int8/int4 sweeps must never share
+    entries with full-precision ones)."""
     backend = backend or jax.default_backend()
     m = ops.bucket_m(m)
-    return (f"v{CACHE_VERSION}|{backend}|{impl}|is{itemsize}"
-            f"|m{m}|o{o}|n{n}|k{k}|vmem{vmem_budget}")
+    dt = jnp.dtype(dtype if dtype is not None
+                   else _ITEMSIZE_DTYPE.get(itemsize, jnp.float32)).name
+    q = f"|q{quant}" if quant != "none" else ""
+    return (f"v{CACHE_VERSION}|{backend}|{impl}|is{itemsize}|dt{dt}"
+            f"|m{m}|o{o}|n{n}|k{k}|vmem{vmem_budget}{q}")
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +196,7 @@ def update_cache(updates: dict,
 
 def candidate_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
                      vmem_budget: int = ops._VMEM_BUDGET,
-                     max_candidates: int = 8) -> list:
+                     max_candidates: int = 8, quant: str = "none") -> list:
     """The static `choose_blocks` pick (always first) plus its one-step
     power-of-two neighbors per dimension, filtered to the double-buffered
     VMEM budget and to sizes that do not exceed the padded problem dims.
@@ -196,8 +210,9 @@ def candidate_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
     power-of-two bucket first, matching `cache_key`.
     """
     m = ops.bucket_m(m)
+    wb = ops.QUANT_WBYTES[quant]
     static = ops.choose_blocks(m, o, n, k, itemsize=itemsize,
-                               vmem_budget=vmem_budget)
+                               vmem_budget=vmem_budget, w_bytes=wb)
     caps = {"bm": max(8, ops._round_up(m, 8)),
             "bo": max(8, ops._round_up(o, 8)),
             "bn": max(8, ops._round_up(n, 8))}
@@ -209,7 +224,7 @@ def candidate_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
         if key in seen or len(out) >= max_candidates:
             return
         fp = ops._tiled_footprint(bm, bo, bn, ops._tiled_kb_est(n, k, bn),
-                                  itemsize)
+                                  itemsize, w_bytes=wb)
         if not force and 2 * fp > vmem_budget:
             return
         seen.add(key)
@@ -250,22 +265,28 @@ def _bench_problem(m: int, o: int, n: int, k: int, dtype):
 
 
 def bench_time(fn, *args, iters: int, warmup: int = 1) -> float:
-    """Mean seconds per call: ``warmup`` untimed calls (compile), then
-    ``iters`` timed calls blocking on the last output.  Shared by the sweep
-    and the `benchmarks/` harnesses so the timing discipline stays one
+    """Best-of-``iters`` seconds per call: ``warmup`` untimed calls
+    (compile), then ``iters`` independently timed calls, returning the
+    minimum.  The min strips additive scheduler noise — on a shared host
+    the mean swings 2-3x between runs while the min is reproducible, and
+    the committed BENCH ratios are only a meaningful regression floor if
+    rebuilt from the noise-free estimate.  Shared by the sweep and the
+    `benchmarks/` harnesses so the timing discipline stays one
     implementation."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    best = math.inf
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def sweep_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
                  impl: str = "pallas", iters: int = 2, warmup: int = 1,
-                 vmem_budget: int = ops._VMEM_BUDGET) -> tuple:
+                 vmem_budget: int = ops._VMEM_BUDGET,
+                 dtype=None, quant: str = "none") -> tuple:
     """Time every candidate `BlockChoice` on the real kernel entry and
     return ``(winner, record)``.
 
@@ -280,9 +301,13 @@ def sweep_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
     """
     m = ops.bucket_m(m)
     static = ops.choose_blocks(m, o, n, k, itemsize=itemsize,
-                               vmem_budget=vmem_budget)
+                               vmem_budget=vmem_budget,
+                               w_bytes=ops.QUANT_WBYTES[quant])
+    dtype = dtype if dtype is not None \
+        else _ITEMSIZE_DTYPE.get(itemsize, jnp.float32)
     base = {"backend": jax.default_backend(), "impl": impl,
             "m": m, "o": o, "n": n, "k": k, "itemsize": itemsize,
+            "dtype": jnp.dtype(dtype).name, "quant": quant,
             "jax": jax.__version__, "interpret": ops._INTERPRET}
     if impl not in TUNABLE_IMPLS:
         record = dict(base, source="static",
@@ -291,15 +316,16 @@ def sweep_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
                       static_time_s=None, candidates=[])
         return static, record
 
-    dtype = _ITEMSIZE_DTYPE.get(itemsize, jnp.float32)
     x, vals, idx = _bench_problem(m, o, n, k, dtype)
     timed = []
     quarantined = []
     for cand in candidate_blocks(m, o, n, k, itemsize=itemsize,
-                                 vmem_budget=vmem_budget):
+                                 vmem_budget=vmem_budget, quant=quant):
         try:
             kb = max_block_count(idx, n, cand.bn)
             tb = encode_tiled(vals, idx, n, bn=cand.bn, kb=kb)
+            if quant != "none":
+                tb = quantize_tiled(tb, quant)
             fn = jax.jit(functools.partial(ops.tiled_spmm, tb=tb,
                                            block_m=cand.bm, block_o=cand.bo))
             t = bench_time(fn, x, iters=iters, warmup=warmup)
@@ -369,7 +395,8 @@ def resolve_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
                    impl: str = "pallas", tune: str = "off",
                    cache_path: str | None = None,
                    vmem_budget: int = ops._VMEM_BUDGET,
-                   iters: int = 2, warmup: int = 1) -> Resolved:
+                   iters: int = 2, warmup: int = 1,
+                   dtype=None, quant: str = "none") -> Resolved:
     """Resolve a `BlockChoice` for one GEMM key under a tune policy.
 
     ``tune="off"``    — the static `ops.choose_blocks` model, untimed.
@@ -388,14 +415,17 @@ def resolve_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
     """
     if tune not in ("off", "cached", "sweep"):
         raise ValueError(f"tune must be off|cached|sweep, got {tune!r}")
+    if quant not in QUANT_MODES:
+        raise ValueError(f"quant must be one of {QUANT_MODES}, got {quant!r}")
     m = ops.bucket_m(m)
     static = ops.choose_blocks(m, o, n, k, itemsize=itemsize,
-                               vmem_budget=vmem_budget)
+                               vmem_budget=vmem_budget,
+                               w_bytes=ops.QUANT_WBYTES[quant])
     if tune == "off" or impl not in TUNABLE_IMPLS:
         return Resolved(static, "static", static)
     path = cache_path or default_cache_path()
     key = cache_key(m, o, n, k, itemsize=itemsize, impl=impl,
-                    vmem_budget=vmem_budget)
+                    vmem_budget=vmem_budget, dtype=dtype, quant=quant)
     entries = load_cache(path)
     hit = entries.get(key)
     if _valid_entry(hit):
@@ -404,7 +434,8 @@ def resolve_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
         return Resolved(static, "static", static)
     best, record = sweep_blocks(m, o, n, k, itemsize=itemsize, impl=impl,
                                 iters=iters, warmup=warmup,
-                                vmem_budget=vmem_budget)
+                                vmem_budget=vmem_budget,
+                                dtype=dtype, quant=quant)
     if record.get("source") == "sweep":
         # locked read-merge-write: concurrent sweeps union their entries
         update_cache({key: record}, path)
@@ -423,11 +454,12 @@ def main(argv=None):  # pragma: no cover - thin CLI
     ap.add_argument("--n", type=int, required=True)
     ap.add_argument("--k", type=int, required=True)
     ap.add_argument("--itemsize", type=int, default=4, choices=(2, 4))
+    ap.add_argument("--quant", default="none", choices=QUANT_MODES)
     ap.add_argument("--cache", default=None)
     args = ap.parse_args(argv)
     res = resolve_blocks(args.m, args.o, args.n, args.k,
                          itemsize=args.itemsize, impl="pallas", tune="sweep",
-                         cache_path=args.cache)
+                         cache_path=args.cache, quant=args.quant)
     print(f"{res.source}: bm={res.blocks.bm} bo={res.blocks.bo} "
           f"bn={res.blocks.bn} (static bm={res.static.bm} "
           f"bo={res.static.bo} bn={res.static.bn}) -> "

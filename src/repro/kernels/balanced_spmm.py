@@ -23,6 +23,8 @@ VMEM per step (f32): bm*bn (x) + bo*KB*2 (vals+idx) + bo*bn (decoded tile)
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -30,6 +32,37 @@ from jax.experimental import pallas as pl
 from .tile_format import TiledBalanced
 
 Array = jax.Array
+
+
+def _decode_tile(vals, idx, scales, quant: str, bn: int):
+    """Scatter-decode one weight block to a dense ``[bo, bn]`` VMEM tile.
+
+    ``vals`` is the stored encoding (f32/bf16, int8, or nibble-packed
+    uint8), ``idx`` the block-local [bo, KB] indices, ``scales`` the
+    per-row [bo, 1] block scales (None when quant == "none").  Quantized
+    values dequantize *here*, in VMEM, immediately before the scatter that
+    feeds the MXU dot — DRAM and the block pipeline only ever move the
+    narrow words.  Must reconstruct exactly like
+    `tile_format.dequantize_values` (the parity reference).
+    """
+    bo, kb = idx.shape
+    if quant == "int4":
+        lo = vals & 0xF
+        hi = vals >> 4
+        q = jnp.stack([lo, hi], axis=-1).reshape(
+            bo, vals.shape[1] * 2).astype(jnp.int8)
+        v = (((q ^ 8) - 8)[:, :kb]).astype(jnp.float32) * scales
+    elif quant == "int8":
+        v = vals.astype(jnp.float32) * scales
+    else:
+        v = vals.astype(jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 0)
+    return jnp.zeros((bo, bn), jnp.float32).at[rows, idx].add(v)
+
+
+def _packed_kb(kb: int, quant: str) -> int:
+    """Stored KB width of the values leaf: nibble-packed for int4."""
+    return -(-kb // 2) if quant == "int4" else kb
 
 
 def _kernel(x_ref, v_ref, i_ref, o_ref):
@@ -54,31 +87,63 @@ def _kernel(x_ref, v_ref, i_ref, o_ref):
     o_ref[...] += jnp.dot(x, w_tile.T, preferred_element_type=jnp.float32)
 
 
+def _kernel_q(x_ref, v_ref, i_ref, s_ref, o_ref, *, quant: str):
+    """Quantized twin of `_kernel`: same grid step plus a [bo, 1] scales
+    tile; narrow values dequantize in VMEM inside `_decode_tile`."""
+    nb = pl.program_id(2)
+
+    @pl.when(nb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                              # [bm, bn]
+    vals = v_ref[...].reshape(v_ref.shape[0], v_ref.shape[2])   # [bo, KBp]
+    idx = i_ref[...].reshape(i_ref.shape[0], i_ref.shape[2])    # [bo, KB]
+    w_tile = _decode_tile(vals, idx, s_ref[...], quant, x.shape[1])
+    o_ref[...] += jnp.dot(x, w_tile.T, preferred_element_type=jnp.float32)
+
+
 def tiled_balanced_spmm_pallas(x: Array, tb: TiledBalanced, *, bm: int = 128,
                                bo: int = 128,
                                interpret: bool = True) -> Array:
     """Raw pallas_call; shapes must already be tile-aligned (see ops.py).
 
-    x: [M, NB*bn]; tb.values/indices: [O, NB, KB] with M % bm == O % bo == 0.
-    Returns f32 [M, O] (accumulator dtype; caller casts).
+    x: [M, NB*bn]; tb.values/indices: [O, NB, KB] with M % bm == O % bo == 0
+    (int4 values are nibble-packed [O, NB, KB/2]).  Returns f32 [M, O]
+    (accumulator dtype; caller casts).
     """
     m, n = x.shape
-    o, nb, kb = tb.values.shape
+    o, nb, kb = tb.indices.shape
     bn = tb.bn
-    assert n == nb * bn and m % bm == 0 and o % bo == 0, (x.shape, tb.values.shape, bm, bo, bn)
+    assert n == nb * bn and m % bm == 0 and o % bo == 0, (x.shape, tb.indices.shape, bm, bo, bn)
     grid = (m // bm, o // bo, nb)
+    if tb.quant == "none":
+        return pl.pallas_call(
+            _kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bn), lambda i, j, b: (i, b)),  # x col-block
+                pl.BlockSpec((bo, 1, kb), lambda i, j, b: (j, b, 0)),  # values
+                pl.BlockSpec((bo, 1, kb), lambda i, j, b: (j, b, 0)),  # idx
+            ],
+            out_specs=pl.BlockSpec((bm, bo), lambda i, j, b: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+            interpret=interpret,
+        )(x, tb.values, tb.indices)
+    kbp = _packed_kb(kb, tb.quant)
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel_q, quant=tb.quant),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j, b: (i, b)),      # x col-block
-            pl.BlockSpec((bo, 1, kb), lambda i, j, b: (j, b, 0)),  # values
-            pl.BlockSpec((bo, 1, kb), lambda i, j, b: (j, b, 0)),  # local idx
+            pl.BlockSpec((bo, 1, kbp), lambda i, j, b: (j, b, 0)),  # q values
+            pl.BlockSpec((bo, 1, kb), lambda i, j, b: (j, b, 0)),   # local idx
+            pl.BlockSpec((bo, 1), lambda i, j, b: (j, b)),          # scales
         ],
         out_specs=pl.BlockSpec((bm, bo), lambda i, j, b: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
         interpret=interpret,
-    )(x, tb.values, tb.indices)
+    )(x, tb.values, tb.indices, tb.scales)
 
 
 def _kernel_skinny(x_ref, v_ref, i_ref, o_ref):
@@ -102,6 +167,21 @@ def _kernel_skinny(x_ref, v_ref, i_ref, o_ref):
     o_ref[...] += jnp.dot(x, w_tile.T, preferred_element_type=jnp.float32)
 
 
+def _kernel_skinny_q(x_ref, v_ref, i_ref, s_ref, o_ref, *, quant: str):
+    """Quantized twin of `_kernel_skinny` (scales tile + in-VMEM dequant)."""
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                              # [m, bn]
+    vals = v_ref[...].reshape(v_ref.shape[0], v_ref.shape[2])   # [bo, KBp]
+    idx = i_ref[...].reshape(i_ref.shape[0], i_ref.shape[2])    # [bo, KB]
+    w_tile = _decode_tile(vals, idx, s_ref[...], quant, x.shape[1])
+    o_ref[...] += jnp.dot(x, w_tile.T, preferred_element_type=jnp.float32)
+
+
 def tiled_balanced_spmm_skinny_pallas(x: Array, tb: TiledBalanced, *,
                                       bo: int = 128,
                                       interpret: bool = True) -> Array:
@@ -111,22 +191,37 @@ def tiled_balanced_spmm_skinny_pallas(x: Array, tb: TiledBalanced, *,
     pays a full [128, bn] x-tile load per step.
     """
     m, n = x.shape
-    o, nb, kb = tb.values.shape
+    o, nb, kb = tb.indices.shape
     bn = tb.bn
-    assert n == nb * bn and o % bo == 0 and m <= 8, (x.shape, tb.values.shape, bo, bn)
+    assert n == nb * bn and o % bo == 0 and m <= 8, (x.shape, tb.indices.shape, bo, bn)
     grid = (o // bo, nb)
+    if tb.quant == "none":
+        return pl.pallas_call(
+            _kernel_skinny,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((m, bn), lambda j, b: (0, b)),      # x col-block
+                pl.BlockSpec((bo, 1, kb), lambda j, b: (j, b, 0)),   # values
+                pl.BlockSpec((bo, 1, kb), lambda j, b: (j, b, 0)),   # idx
+            ],
+            out_specs=pl.BlockSpec((m, bo), lambda j, b: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+            interpret=interpret,
+        )(x, tb.values, tb.indices)
+    kbp = _packed_kb(kb, tb.quant)
     return pl.pallas_call(
-        _kernel_skinny,
+        functools.partial(_kernel_skinny_q, quant=tb.quant),
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, bn), lambda j, b: (0, b)),          # x col-block
-            pl.BlockSpec((bo, 1, kb), lambda j, b: (j, b, 0)),   # values
+            pl.BlockSpec((bo, 1, kbp), lambda j, b: (j, b, 0)),  # q values
             pl.BlockSpec((bo, 1, kb), lambda j, b: (j, b, 0)),   # local idx
+            pl.BlockSpec((bo, 1), lambda j, b: (j, b)),          # scales
         ],
         out_specs=pl.BlockSpec((m, bo), lambda j, b: (0, j)),
         out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
         interpret=interpret,
-    )(x, tb.values, tb.indices)
+    )(x, tb.values, tb.indices, tb.scales)
 
 
 def _kernel_batched(x_ref, v_ref, i_ref, o_ref):
@@ -152,30 +247,66 @@ def _kernel_batched(x_ref, v_ref, i_ref, o_ref):
     o_ref[...] += acc[None]
 
 
+def _kernel_batched_q(x_ref, v_ref, i_ref, s_ref, o_ref, *, quant: str):
+    """Quantized twin of `_kernel_batched` (per-expert scales tile)."""
+    nb = pl.program_id(3)
+
+    @pl.when(nb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].reshape(x_ref.shape[1], x_ref.shape[2])      # [bm, bn]
+    vals = v_ref[...].reshape(v_ref.shape[1], v_ref.shape[3])   # [bo, KBp]
+    idx = i_ref[...].reshape(i_ref.shape[1], i_ref.shape[3])    # [bo, KB]
+    scales = s_ref[...].reshape(s_ref.shape[1], s_ref.shape[2])  # [bo, 1]
+    w_tile = _decode_tile(vals, idx, scales, quant, x.shape[1])
+    acc = jnp.dot(x, w_tile.T, preferred_element_type=jnp.float32)
+    o_ref[...] += acc[None]
+
+
 def tiled_balanced_spmm_batched_pallas(x: Array, values: Array,
                                        indices: Array, *, bn: int,
                                        bm: int = 128, bo: int = 128,
+                                       scales: Array | None = None,
+                                       quant: str = "none",
                                        interpret: bool = True) -> Array:
     """Fused batched (per-expert) tiled matmul: one grid over all experts.
 
     x: [E, M, NB*bn]; values/indices: [E, O, NB, KB] with M % bm == 0 and
-    O % bo == 0.  Grid ``(E, M/bm, O/bo, NB)`` replaces the per-expert
+    O % bo == 0 (int4 values [E, O, NB, KB/2]; ``scales`` [E, O, NB] when
+    quantized).  Grid ``(E, M/bm, O/bo, NB)`` replaces the per-expert
     `lax.scan` dispatch (one kernel launch and one trace for the whole MoE
     layer).  Returns f32 [E, M, O].
     """
     e, m, n = x.shape
-    _, o, nb, kb = values.shape
-    assert n == nb * bn and m % bm == 0 and o % bo == 0, (x.shape, values.shape, bm, bo, bn)
+    _, o, nb, kb = indices.shape
+    assert n == nb * bn and m % bm == 0 and o % bo == 0, (x.shape, indices.shape, bm, bo, bn)
     grid = (e, m // bm, o // bo, nb)
+    if quant == "none":
+        return pl.pallas_call(
+            _kernel_batched,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, bn), lambda g, i, j, b: (g, i, b)),
+                pl.BlockSpec((1, bo, 1, kb), lambda g, i, j, b: (g, j, b, 0)),
+                pl.BlockSpec((1, bo, 1, kb), lambda g, i, j, b: (g, j, b, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bo),
+                                   lambda g, i, j, b: (g, i, j)),
+            out_shape=jax.ShapeDtypeStruct((e, m, o), jnp.float32),
+            interpret=interpret,
+        )(x, values, indices)
+    kbp = _packed_kb(kb, quant)
     return pl.pallas_call(
-        _kernel_batched,
+        functools.partial(_kernel_batched_q, quant=quant),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bm, bn), lambda g, i, j, b: (g, i, b)),
+            pl.BlockSpec((1, bo, 1, kbp), lambda g, i, j, b: (g, j, b, 0)),
             pl.BlockSpec((1, bo, 1, kb), lambda g, i, j, b: (g, j, b, 0)),
-            pl.BlockSpec((1, bo, 1, kb), lambda g, i, j, b: (g, j, b, 0)),
+            pl.BlockSpec((1, bo, 1), lambda g, i, j, b: (g, j, b)),
         ],
         out_specs=pl.BlockSpec((1, bm, bo), lambda g, i, j, b: (g, i, j)),
         out_shape=jax.ShapeDtypeStruct((e, m, o), jnp.float32),
         interpret=interpret,
-    )(x, values, indices)
+    )(x, values, indices, scales)

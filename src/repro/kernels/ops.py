@@ -49,7 +49,14 @@ from .balanced_spmm import (tiled_balanced_spmm_batched_pallas,
                             tiled_balanced_spmm_pallas,
                             tiled_balanced_spmm_skinny_pallas)
 from .bitmap_spmm import bitmap_encode, bitmap_spmm_pallas
-from .tile_format import TiledBalanced, encode_tiled, max_block_count
+from .tile_format import (TiledBalanced, dequantize_values, encode_tiled,
+                          max_block_count, tiled_to_dense, unpack_int4)
+
+# Stored bytes per weight slot under block quantization (None: weights share
+# the activation itemsize).  Feeds the VMEM footprint model so the block
+# chooser/autotuner can grow (bn, bo) when narrow tiles shrink the working
+# set — the whole point of the quantized tile-local format.
+QUANT_WBYTES = {"none": None, "int8": 1.0, "int4": 0.5}
 
 Array = jax.Array
 
@@ -61,6 +68,13 @@ _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 # (`transformer._moe`'s ``cap = max(8, ...)``).  Static at trace time —
 # routing is free.
 SKINNY_M = 8
+
+# Widest M at which the quant fallbacks still prefer the gather+einsum
+# formulation over densify+dot: the [M, O, SLOTS] gather buffer grows
+# linearly in M while the densify cost is M-independent, and measured on
+# CPU the crossover sits between M=32 and M=64 across N, O in [64, 1024]
+# (grid in DESIGN.md §13).  Static at trace time — routing is free.
+GATHER_M = 32
 
 
 def bucket_m(m: int) -> int:
@@ -119,11 +133,17 @@ class BlockChoice:
     vmem_bytes: int     # modeled per-step footprint
 
 
-def _tiled_footprint(bm: int, bo: int, bn: int, kb: int, itemsize: int) -> int:
+def _tiled_footprint(bm: int, bo: int, bn: int, kb: int, itemsize: int,
+                     w_bytes: float | None = None) -> int:
     """Per-step VMEM bytes of the tiled kernel: x tile + (vals, idx) block +
-    decoded w_tile (f32) + f32 accumulator."""
-    return (bm * bn * itemsize + bo * kb * (itemsize + 4)
-            + bo * bn * 4 + bm * bo * 4)
+    decoded w_tile (f32) + f32 accumulator.  ``w_bytes`` overrides the
+    stored bytes per value slot for quantized encodings (1.0 int8, 0.5
+    int4 — see `QUANT_WBYTES`), which also adds the [bo, 1] f32 scales
+    tile."""
+    wb = itemsize if w_bytes is None else w_bytes
+    scales = 0 if w_bytes is None else bo * 4
+    return int(bm * bn * itemsize + bo * kb * (wb + 4) + scales
+               + bo * bn * 4 + bm * bo * 4)
 
 
 def _tiled_kb_est(n: int, k: int, bn: int) -> int:
@@ -146,7 +166,8 @@ def _bitmap_footprint(bm: int, bo: int, bn: int, k: int, itemsize: int) -> int:
 @functools.lru_cache(maxsize=512)
 def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
                   vmem_budget: int = _VMEM_BUDGET, kind: str = "tiled",
-                  bn: int | None = None) -> BlockChoice:
+                  bn: int | None = None,
+                  w_bytes: float | None = None) -> BlockChoice:
     """Pick (bm, bo, bn) for the balanced-sparse kernels — the *static
     model* (a closed-form VMEM-occupancy prior; no kernel is ever run).
 
@@ -165,6 +186,10 @@ def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
     its fallback and candidate generator, and `autotune.resolve_blocks`
     (the entry `engine.plan` uses) returns either this choice or a cached/
     swept winner, per the caller's ``tune`` policy (DESIGN.md §10).
+
+    ``w_bytes`` (see `QUANT_WBYTES`) narrows the modeled weight-slot width
+    for block-quantized encodings, so the same budget admits 2-4x larger
+    (bn, bo) tiles than the f32 model would allow.
     """
     bm = _pick_block(m, 128)
     bo = _pick_block(o, 128)
@@ -178,8 +203,10 @@ def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
     def footprint(bm_, bo_, bn_):
         if kind == "bitmap":
             return _bitmap_footprint(bm_, bo_, bn_, k, itemsize)
-        return _tiled_footprint(bm_, bo_, bn_, kb_est(bn_), itemsize)
+        return _tiled_footprint(bm_, bo_, bn_, kb_est(bn_), itemsize,
+                                w_bytes)
 
+    wb = itemsize if w_bytes is None else w_bytes
     while 2 * footprint(bm, bo, bn) > vmem_budget:
         # shrink the largest contributor; keep everything >= 8
         if kind == "bitmap":
@@ -190,7 +217,7 @@ def choose_blocks(m: int, o: int, n: int, k: int, *, itemsize: int = 4,
         else:
             shares = {
                 "bm": bm * (bn * itemsize + bo * 4),
-                "bo": bo * (kb_est(bn) * (itemsize + 4) + bn * 4 + bm * 4),
+                "bo": bo * (kb_est(bn) * (wb + 4) + bn * 4 + bm * 4),
                 "bn": bn * (bm * itemsize + bo * 4),
             }
         if bn_fixed:
@@ -347,19 +374,23 @@ def _pad_and_run_tiled(x: Array, tb: TiledBalanced, bm: int, bo: int,
     if skinny:
         _fault_trip("pallas_decode", bm=bm, bo=bo, bn=tb.bn)
     m = x.shape[0]
-    o = tb.values.shape[0]
+    o = tb.indices.shape[0]
     # skinny: M pads to the 8-row sublane regardless of the plan's bm (the
     # decode kernel has no M grid axis, so bm is not a dispatch parameter)
     mp = _round_up(m, 8) if skinny else _round_up(m, bm)
     op_ = _round_up(o, bo)
     xp = jnp.pad(x, ((0, mp - m), (0, tb.nb * tb.bn - x.shape[1])))
     if op_ != o:
-        # zero-padded rows decode to all-zero tiles — harmless
+        # zero-padded rows decode to all-zero tiles — harmless (a zero
+        # scale against all-zero q slots is the valid empty-block encoding)
         tb = TiledBalanced(
             jnp.pad(tb.values, ((0, op_ - o), (0, 0), (0, 0))),
             jnp.pad(tb.indices, ((0, op_ - o), (0, 0), (0, 0))),
             jnp.pad(tb.counts, ((0, op_ - o), (0, 0))),
-            n_in=tb.n_in, bn=tb.bn)
+            n_in=tb.n_in, bn=tb.bn,
+            scales=None if tb.scales is None
+            else jnp.pad(tb.scales, ((0, op_ - o), (0, 0))),
+            quant=tb.quant)
     if skinny:
         y = tiled_balanced_spmm_skinny_pallas(xp, tb, bo=bo,
                                               interpret=_INTERPRET)
@@ -472,8 +503,111 @@ def _tiled_bwd(n_in, bn, bm, bo, skinny, res, dy):
 _tiled_spmm.defvjp(_tiled_fwd, _tiled_bwd)
 
 
+def _densify_gather_tiled(values, indices, counts, scales, bn, quant):
+    """Gather-only densify of a (perm-free) tiled encoding ->
+    ``[O, NB*bn]`` f32, dequantized — the tiled twin of `_densify_gather`
+    (same searchsorted trick, per block instead of per row; same reason:
+    XLA lowers gathers to vectorized loads where the scatter in
+    `tiled_to_dense` serializes on CPU).  Block-local indices are ascending
+    over each block's live slots (`encode_tiled` preserves the flat
+    format's ascending order); pad slots are re-pointed at the
+    out-of-range sentinel ``bn`` so every searched row is sorted.  The
+    (O, NB) block axes are collapsed before the vmap — one batched
+    searchsorted over O*NB rows lowers to a single fused gather loop,
+    measurably faster than the nested-vmap form at large N."""
+    o, nb, kb = indices.shape
+    vals = dequantize_values(values, scales, quant, kb).reshape(o * nb, kb)
+    valid = jnp.arange(kb, dtype=indices.dtype) < counts[..., None]
+    idx = jnp.where(valid, indices, bn).reshape(o * nb, kb)
+    cols = jnp.arange(bn, dtype=indices.dtype)
+    slot = jax.vmap(lambda row: jnp.searchsorted(row, cols))(idx)
+    slot = jnp.clip(slot, 0, kb - 1)
+    hit = jnp.take_along_axis(idx, slot, axis=-1) == cols
+    out = jnp.where(hit, jnp.take_along_axis(vals, slot, axis=-1), 0.0)
+    return out.reshape(o, nb * bn)
+
+
+def _tiled_gather_spmm(x, values, indices, scales, bn, quant):
+    """Gather+einsum on the tiled encoding (no densify) — the decode-shaped
+    fallback formulation, mirroring `ref.balanced_spmm_gather`: at skinny M
+    the ``[M, O, NB*KB]`` buffer is small and a per-step O*N densify would
+    dominate the dot.  Pad slots contribute exactly 0 (their stored value
+    word is 0).  Quantized tiles factor the per-block scale *out* of the
+    slot reduction (``sum_s x*q*scale == scale * sum_s x*q``, exact per
+    block): the scale multiply then costs O(M*O*NB) instead of O(O*SLOTS),
+    which at decode M is the difference between matching the f32 gather
+    and trailing it by the whole dequant."""
+    o, nb, kb = indices.shape
+    cols = (jnp.arange(nb, dtype=indices.dtype)[None, :, None] * bn
+            + indices).reshape(o, nb * kb)
+    xp = jnp.pad(x, ((0, 0), (0, nb * bn - x.shape[1])))
+    xg = jnp.take(xp, cols, axis=1)                      # [M, O, NB*KB]
+    if scales is None or quant == "none":
+        vals = dequantize_values(values, scales, quant, kb).reshape(o, -1)
+        return jnp.einsum("mos,os->mo", xg, vals,
+                          preferred_element_type=jnp.float32)
+    q = unpack_int4(values, kb) if quant == "int4" else values
+    partial = jnp.einsum("mons,ons->mon",
+                         xg.reshape(x.shape[0], o, nb, kb),
+                         q.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    return jnp.einsum("mon,on->mo", partial, scales)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11))
+def _tiled_spmm_q(x, values, indices, counts, scales, n_in, bn, bm, bo,
+                  skinny, quant, impl):
+    """Quantized tiled matmul with impl routing: "pallas" runs the quant
+    kernel variants (in-VMEM dequant), "xla"/"xla_gather" dequantize +
+    densify + rank-2 dot — the quantized plan's CPU/sharded fallbacks,
+    which unlike the flat-format fallbacks keep the tile-local scales."""
+    if impl == "pallas":
+        tb = TiledBalanced(values, indices, counts, n_in=n_in, bn=bn,
+                           scales=scales, quant=quant)
+        return _pad_and_run_tiled(x, tb, bm, bo, skinny=skinny)
+    _fault_trip("xla_gather" if impl == "xla_gather" else "xla")
+    if impl == "xla_gather":
+        return _tiled_gather_spmm(x, values, indices, scales, bn,
+                                  quant).astype(x.dtype)
+    if skinny:
+        _fault_trip("xla_decode")
+        return _tiled_gather_spmm(x, values, indices, scales, bn,
+                                  quant).astype(x.dtype)
+    if x.shape[0] <= GATHER_M:
+        return _tiled_gather_spmm(x, values, indices, scales, bn,
+                                  quant).astype(x.dtype)
+    w = _densify_gather_tiled(values, indices, counts, scales, bn, quant)
+    return jnp.dot(x, w[:, :x.shape[1]].T,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _tiled_q_fwd(x, values, indices, counts, scales, n_in, bn, bm, bo,
+                 skinny, quant, impl):
+    y = _tiled_spmm_q(x, values, indices, counts, scales, n_in, bn, bm, bo,
+                      skinny, quant, impl)
+    return y, (x, values, indices, counts, scales)
+
+
+def _tiled_q_bwd(n_in, bn, bm, bo, skinny, quant, impl, res, dy):
+    # Straight-through: dx flows through the *dequantized* weights exactly
+    # (the forward's W); the quantized value words and scales get no
+    # cotangent — block-quantized weights are a deployment format, not a
+    # training parameterization (DESIGN.md §13).
+    x, values, indices, counts, scales = res
+    w = _densify_gather_tiled(values, indices, counts, scales, bn,
+                              quant)[:, :x.shape[1]]
+    dx = jnp.dot(dy, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    dvals = None if not jnp.issubdtype(values.dtype, jnp.inexact) \
+        else jnp.zeros_like(values)
+    dscales = None if scales is None else jnp.zeros_like(scales)
+    return dx, dvals, None, None, dscales
+
+
+_tiled_spmm_q.defvjp(_tiled_q_fwd, _tiled_q_bwd)
+
+
 def tiled_spmm(x: Array, tb: TiledBalanced, *, block_m: int | None = None,
-               block_o: int | None = None) -> Array:
+               block_o: int | None = None, impl: str = "pallas") -> Array:
     """Differentiable balanced-sparse matmul on a *pre-encoded*
     `TiledBalanced` weight.  ``x``: ``[..., N]`` -> ``[..., O]``.
 
@@ -487,6 +621,12 @@ def tiled_spmm(x: Array, tb: TiledBalanced, *, block_m: int | None = None,
     *outside* the custom_vjp, so autodiff transposes the gather and the VJP
     below never sees the permutation.  It is also the function
     `kernels.autotune.sweep_blocks` times per candidate.
+
+    Quantized encodings (``tb.quant != "none"``) route through the quant
+    custom_vjp — the pallas impl dequantizes in VMEM inside the kernel,
+    while ``impl="xla"``/``"xla_gather"`` (the quantized plan's fallback
+    impls, which keep the tiled format for its scales) dequantize +
+    densify + dot.  Grads are straight-through to the dequantized values.
     """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
@@ -502,10 +642,14 @@ def tiled_spmm(x: Array, tb: TiledBalanced, *, block_m: int | None = None,
     m = x2.shape[0]
     skinny = m <= SKINNY_M
     bm = _round_up(m, 8) if skinny else _pick_block(m, block_m or 128)
-    bo = _pick_block(tb.values.shape[0], block_o or 128)
-    y = _tiled_spmm(x2, tb.values, tb.indices, tb.counts, n_eff, tb.bn,
-                    bm, bo, skinny)
-    return y.reshape(*lead, tb.values.shape[0])
+    bo = _pick_block(tb.n_out, block_o or 128)
+    if tb.quant == "none" and impl == "pallas":
+        y = _tiled_spmm(x2, tb.values, tb.indices, tb.counts, n_eff, tb.bn,
+                        bm, bo, skinny)
+    else:
+        y = _tiled_spmm_q(x2, tb.values, tb.indices, tb.counts, tb.scales,
+                          n_eff, tb.bn, bm, bo, skinny, tb.quant, impl)
+    return y.reshape(*lead, tb.n_out)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
@@ -553,9 +697,87 @@ def _tiled_batched_bwd(n_in, bn, bm, bo, res, dy):
 _tiled_spmm_batched.defvjp(_tiled_batched_fwd, _tiled_batched_bwd)
 
 
+def _densify_gather_tiled_b(values, indices, counts, scales, bn, quant, g):
+    """One expert group's gather densify (scales may be None when the
+    unquantized tiled format rides this fallback)."""
+    return _densify_gather_tiled(values[g], indices[g], counts[g],
+                                 None if scales is None else scales[g],
+                                 bn, quant)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+def _tiled_spmm_batched_q(x, values, indices, counts, scales, n_in, bn, bm,
+                          bo, quant, impl):
+    """Quantized twin of `_tiled_spmm_batched` with impl routing (see
+    `_tiled_spmm_q`): one fused grid over all experts, per-expert scales."""
+    if impl == "pallas":
+        _fault_trip("pallas", bm=bm, bo=bo, bn=bn, batched=True)
+        e, m, _ = x.shape
+        o, nb = indices.shape[1], indices.shape[2]
+        mp, op_ = _round_up(m, bm), _round_up(o, bo)
+        xp = jnp.pad(x, ((0, 0), (0, mp - m), (0, nb * bn - x.shape[2])))
+        vp, ip, sp = values, indices, scales
+        if op_ != o:
+            vp = jnp.pad(values, ((0, 0), (0, op_ - o), (0, 0), (0, 0)))
+            ip = jnp.pad(indices, ((0, 0), (0, op_ - o), (0, 0), (0, 0)))
+            sp = jnp.pad(scales, ((0, 0), (0, op_ - o), (0, 0)))
+        y = tiled_balanced_spmm_batched_pallas(
+            xp, vp, ip, bn=bn, bm=bm, bo=bo, scales=sp, quant=quant,
+            interpret=_INTERPRET)
+        return y[:, :m, :o].astype(x.dtype)
+    _fault_trip("xla_gather" if impl == "xla_gather" else "xla",
+                batched=True)
+    skinny_b = x.shape[1] <= SKINNY_M
+    if impl != "xla_gather" and skinny_b:
+        _fault_trip("xla_decode", batched=True)
+    if impl == "xla_gather" or x.shape[1] <= GATHER_M:
+        sc = scales if scales is not None else None
+        f = lambda xe, v, i, s: _tiled_gather_spmm(xe, v, i, s, bn, quant)
+        if sc is None:
+            y = jax.vmap(lambda xe, v, i: f(xe, v, i, None))(
+                x, values, indices)
+        else:
+            y = jax.vmap(f)(x, values, indices, sc)
+        return y.astype(x.dtype)
+    # unrolled over the (static) group axis, mirroring `_balanced_spmm_b`:
+    # densify each group right before its dot so [O, N] stays cache-hot
+    outs = [jnp.dot(
+        x[g],
+        _densify_gather_tiled_b(values, indices, counts, scales, bn,
+                                quant, g)[:, :x.shape[2]].T,
+        preferred_element_type=jnp.float32)
+        for g in range(x.shape[0])]
+    return jnp.stack(outs).astype(x.dtype)
+
+
+def _tiled_batched_q_fwd(x, values, indices, counts, scales, n_in, bn, bm,
+                         bo, quant, impl):
+    y = _tiled_spmm_batched_q(x, values, indices, counts, scales, n_in, bn,
+                              bm, bo, quant, impl)
+    return y, (x, values, indices, counts, scales)
+
+
+def _tiled_batched_q_bwd(n_in, bn, bm, bo, quant, impl, res, dy):
+    x, values, indices, counts, scales = res
+    dx = jnp.stack([jnp.dot(
+        dy[g],
+        _densify_gather_tiled_b(values, indices, counts, scales, bn,
+                                quant, g)[:, :x.shape[2]],
+        preferred_element_type=jnp.float32)
+        for g in range(x.shape[0])]).astype(x.dtype)
+    dvals = None if not jnp.issubdtype(values.dtype, jnp.inexact) \
+        else jnp.zeros_like(values)
+    dscales = None if scales is None else jnp.zeros_like(scales)
+    return dx, dvals, None, None, dscales
+
+
+_tiled_spmm_batched_q.defvjp(_tiled_batched_q_fwd, _tiled_batched_q_bwd)
+
+
 def tiled_spmm_batched(x: Array, tb: TiledBalanced, *,
                        block_m: int | None = None,
-                       block_o: int | None = None) -> Array:
+                       block_o: int | None = None,
+                       impl: str = "pallas") -> Array:
     """Fused batched pre-encoded entry: every group's balanced-sparse
     matmul in ONE kernel dispatch.
 
@@ -572,12 +794,12 @@ def tiled_spmm_batched(x: Array, tb: TiledBalanced, *,
     """
     lead = x.shape[1:-1]
     e = x.shape[0]
-    o = tb.values.shape[1]
+    o = tb.indices.shape[1]
     x3 = x.reshape(e, -1, x.shape[-1])
     n_eff = tb.n_in
     if tb.perm is not None:
         perm = tb.perm
-        npack = tb.values.shape[2] * tb.bn
+        npack = tb.indices.shape[2] * tb.bn
         x3 = jnp.pad(x3, ((0, 0), (0, 0), (0, npack - x3.shape[2])))
         if perm.ndim > 1:
             # lead-broadcast leaf: one (identical) perm row per expert
@@ -591,8 +813,13 @@ def tiled_spmm_batched(x: Array, tb: TiledBalanced, *,
     skinny = m <= SKINNY_M
     bm = _round_up(m, 8) if skinny else _pick_block(m, block_m or 128)
     bo = _pick_block(o, block_o or 128)
-    y = _tiled_spmm_batched(x3, tb.values, tb.indices, tb.counts, n_eff,
-                            tb.bn, bm, bo)
+    if tb.quant == "none" and impl == "pallas":
+        y = _tiled_spmm_batched(x3, tb.values, tb.indices, tb.counts, n_eff,
+                                tb.bn, bm, bo)
+    else:
+        y = _tiled_spmm_batched_q(x3, tb.values, tb.indices, tb.counts,
+                                  tb.scales, n_eff, tb.bn, bm, bo,
+                                  tb.quant, impl)
     return y.reshape(e, *lead, o)
 
 
@@ -696,4 +923,4 @@ def encode_bitmap(w: Array, *, bn: int = 128, k: int | None = None):
 __all__ = ["balanced_spmm", "balanced_spmm_batched", "tiled_spmm",
            "tiled_spmm_batched", "bitmap_spmm", "encode_bitmap",
            "choose_blocks", "BlockChoice", "halve_blocks",
-           "InjectedKernelFault", "SKINNY_M", "bucket_m"]
+           "InjectedKernelFault", "SKINNY_M", "bucket_m", "QUANT_WBYTES"]

@@ -50,6 +50,13 @@ Array = jax.Array
 # Sublane-friendly rounding for the KB axis (f32 min tile is 8 x 128).
 _KB_ROUND = 8
 
+# Per-block symmetric quantization grids (ggml-style block quant: one f32
+# absmax scale per bn-block, narrow two's-complement values).  int4 packs
+# two nibbles per byte along KB — _KB_ROUND keeps KB even, so a block's
+# packed byte row is exactly KB/2 wide.
+QUANT_QMAX = {"int8": 127, "int4": 7}
+QUANT_MODES = ("none",) + tuple(QUANT_QMAX)
+
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
@@ -68,18 +75,25 @@ class TiledBalanced:
     # NB * bn.  Stacked plans broadcast it over lead axes ([L, NB*bn],
     # [L, E, NB*bn]) so per-layer pytree slicing stays shape-consistent.
     perm: Array | None = None
+    # Block quantization (QUANT_MODES): when quant != "none", ``values``
+    # holds the narrow encoding (int8 [O, NB, KB]; int4 packed uint8
+    # [O, NB, KB/2], two nibbles per byte) and ``scales`` the per-block f32
+    # absmax/qmax factors, shaped like ``counts``.  ``indices`` always keeps
+    # the *logical* [O, NB, KB] shape, so geometry reads from it below.
+    scales: Array | None = None
+    quant: str = "none"
 
     @property
     def n_out(self) -> int:
-        return self.values.shape[0]
+        return self.indices.shape[0]
 
     @property
     def nb(self) -> int:
-        return self.values.shape[1]
+        return self.indices.shape[1]
 
     @property
     def kb(self) -> int:
-        return self.values.shape[2]
+        return self.indices.shape[2]
 
     @property
     def k(self) -> int:
@@ -90,17 +104,19 @@ class TiledBalanced:
         return tiled_to_dense(self)
 
     def tree_flatten(self):
-        # perm rides as a child (leaf), not aux data: hashing a few thousand
-        # ints per treedef comparison would tax every jitted dispatch.  A
-        # None perm stays None through flatten/unflatten (None is an empty
-        # subtree, so unpacked encodings keep their pre-perm treedef).
-        return ((self.values, self.indices, self.counts, self.perm),
-                (self.n_in, self.bn))
+        # perm/scales ride as children (leaves), not aux data: hashing a
+        # few thousand ints per treedef comparison would tax every jitted
+        # dispatch.  A None perm/scales stays None through
+        # flatten/unflatten (None is an empty subtree, so unquantized
+        # unpacked encodings keep their pre-quant treedef).
+        return ((self.values, self.indices, self.counts, self.perm,
+                 self.scales),
+                (self.n_in, self.bn, self.quant))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(children[0], children[1], children[2], aux[0], aux[1],
-                   perm=children[3])
+                   perm=children[3], scales=children[4], quant=aux[2])
 
 
 jax.tree_util.register_pytree_node(
@@ -235,14 +251,94 @@ def encode_tiled(values, indices, n_in: int, *, bn: int,
     return TiledBalanced(tv, ti, counts, n_in=n_in, bn=bn)
 
 
+def pack_int4(q: Array) -> Array:
+    """Pack int values in [-8, 7] two nibbles per byte along the last axis
+    (low nibble = slot 2i, high nibble = slot 2i+1).  Odd-length axes get
+    one zero pad slot first — the unpacked tail nibble decodes to 0, the
+    same structural zero a padded tile slot carries."""
+    kb = q.shape[-1]
+    if kb % 2:
+        q = jnp.concatenate(
+            [q, jnp.zeros((*q.shape[:-1], 1), q.dtype)], axis=-1)
+        kb += 1
+    u = (q.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    u = u.reshape(*q.shape[:-1], kb // 2, 2)
+    return u[..., 0] | (u[..., 1] << 4)
+
+
+def unpack_int4(packed: Array, kb: int) -> Array:
+    """Inverse of `pack_int4`: uint8 ``[..., KB/2]`` -> int8 ``[..., kb]``
+    two's-complement values in [-8, 7] (``(n ^ 8) - 8`` sign-extends the
+    nibble)."""
+    lo = packed & 0xF
+    hi = packed >> 4
+    q = jnp.stack([lo, hi], axis=-1).reshape(
+        *packed.shape[:-1], packed.shape[-1] * 2).astype(jnp.int8)
+    return ((q ^ 8) - 8)[..., :kb]
+
+
+def quantize_tiled(tb: TiledBalanced, quant: str) -> TiledBalanced:
+    """Per-block symmetric quantization of a `TiledBalanced` encoding.
+
+    Each (row, block) gets one f32 scale ``absmax / qmax`` (shape ==
+    ``counts``); values become ``round(v / scale)`` clipped to the grid —
+    int8 one byte per slot, int4 two nibbles per byte along KB.  All-zero
+    blocks encode scale 0 with every slot 0 (the encoder never emits a
+    nonzero q against a zero scale — `engine.guard` checks that invariant).
+    Reconstruction error is bounded by ``scale / 2`` per element.
+    Geometry (indices/counts/perm) is untouched; works on stacked leaves
+    (lead axes broadcast through).
+    """
+    if quant == "none":
+        return tb
+    if quant not in QUANT_QMAX:
+        raise ValueError(f"quant must be one of {QUANT_MODES}, got {quant!r}")
+    if tb.quant != "none":
+        raise ValueError(f"encoding is already {tb.quant}-quantized")
+    qmax = QUANT_QMAX[quant]
+    vals = tb.values.astype(jnp.float32)
+    scales = jnp.max(jnp.abs(vals), axis=-1) / qmax          # counts-shaped
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(vals / safe[..., None]), -qmax, qmax)
+    q = jnp.where(scales[..., None] > 0, q, 0.0)
+    qv = q.astype(jnp.int8) if quant == "int8" \
+        else pack_int4(q.astype(jnp.int8))
+    return TiledBalanced(qv, tb.indices, tb.counts, n_in=tb.n_in, bn=tb.bn,
+                         perm=tb.perm, scales=scales, quant=quant)
+
+
+def dequantize_values(values: Array, scales: Array, quant: str,
+                      kb: int) -> Array:
+    """Narrow block-quant values -> f32, ``q * scale`` per block.  ``kb`` is
+    the logical slot count (needed to drop int4's odd-tail pad nibble).
+    This exact expression is what the kernels inline in VMEM before the
+    MXU dot — keep them in lockstep."""
+    if quant == "none":
+        return values
+    q = unpack_int4(values, kb) if quant == "int4" else values
+    return q.astype(jnp.float32) * scales[..., None]
+
+
+def dequantize_tiled(tb: TiledBalanced) -> TiledBalanced:
+    """Quantized encoding -> f32 `TiledBalanced` (quant == "none"), the
+    reference the kernels' in-VMEM dequant must match bit-for-bit."""
+    if tb.quant == "none":
+        return tb
+    vals = dequantize_values(tb.values, tb.scales, tb.quant, tb.kb)
+    return TiledBalanced(vals, tb.indices, tb.counts, n_in=tb.n_in,
+                         bn=tb.bn, perm=tb.perm)
+
+
 def tiled_to_dense(tb: TiledBalanced) -> Array:
     """Densify to ``[O, n_in]`` (reference/inverse of `encode_tiled`).
 
     Packed encodings are unpermuted back to original column order; padded
     slots map to padding columns >= n_in under ``perm`` by construction,
     but padded *tile* slots (value 0, local index 0) may scatter a zero
-    onto a real column — harmless for ``.add``.
+    onto a real column — harmless for ``.add``.  Quantized encodings are
+    dequantized first (the format's f32 reconstruction is the reference).
     """
+    tb = dequantize_tiled(tb)
     o, nb, kb = tb.values.shape
     rows = jnp.arange(o)[:, None, None]
     cols = jnp.arange(nb)[None, :, None] * tb.bn + tb.indices
@@ -264,8 +360,11 @@ def tiled_to_flat(tb: TiledBalanced):
     Host-side (requires concrete indices/counts): this is the degradation
     ladder's pallas -> xla demotion path, not a hot-path op.  Raises
     ``ValueError`` when the encoding violates the balance invariant (rows
-    with unequal totals have no flat [O, K] representation).
+    with unequal totals have no flat [O, K] representation).  Quantized
+    encodings are dequantized first — demotion leaves the quant domain
+    (the flat consumers carry no scales).
     """
+    tb = dequantize_tiled(tb)
     idx = np.asarray(tb.indices)
     cnt = np.asarray(tb.counts)
     o, nb, kb = idx.shape
@@ -314,8 +413,14 @@ def tiled_storage_bits(tb: TiledBalanced, *, elem_bits: int = 16,
     Block-local indices need only ``ceil(log2 bn)`` bits (vs ``log2 N`` for
     flat global indices) — the format's storage edge at equal padding.
     Bit layout matches `core.compression.balanced_tiled_bits` (the shape-
-    level model); this measures a concrete weight.
+    level model); this measures a concrete weight.  Quantized encodings
+    count their narrow element width plus one f32 scale per block.
     """
     idx_bits = max(1, (tb.bn - 1).bit_length())
     n_slots = tb.n_out * tb.nb * tb.kb
-    return n_slots * (elem_bits + idx_bits) + tb.n_out * tb.nb * count_bits
+    scale_bits = 0
+    if tb.quant != "none":
+        elem_bits = {"int8": 8, "int4": 4}[tb.quant]
+        scale_bits = tb.n_out * tb.nb * 32
+    return n_slots * (elem_bits + idx_bits) \
+        + tb.n_out * tb.nb * count_bits + scale_bits

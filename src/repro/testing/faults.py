@@ -5,6 +5,9 @@ catch, so the tests exercise detection/degradation paths rather than hope
 for organic failures:
 
 * `corrupt_tile_encoding`  — structural plan damage -> `guard.validate_plan`
+* `corrupt_scales`         — block-quant scale poison (NaN / zero) ->
+  `guard.validate_plan`'s ``scale`` checks and the ``--guard`` NaN
+  quarantine (a quant layer demotes to the dense reference)
 * `inject_nan_output`      — weight poison -> serve's ``--guard`` NaN
   bisection + quarantine
 * `truncate_shard` / `bit_flip_shard` — checkpoint damage vs the CRC
@@ -90,9 +93,9 @@ def corrupt_tile_encoding(plan: ModelPlan, layer: str | None = None,
             if not nz.size:
                 raise ValueError(f"{name}: row 0 has no NZE to drop")
             flat[0, nz[0]] -= 1
-        new = TiledBalanced(jnp.asarray(vals).astype(w.values.dtype),
-                            jnp.asarray(idx), jnp.asarray(cnt),
-                            n_in=w.n_in, bn=w.bn)
+        new = dataclasses.replace(
+            w, values=jnp.asarray(vals).astype(w.values.dtype),
+            indices=jnp.asarray(idx), counts=jnp.asarray(cnt))
     elif isinstance(w, BalancedSparse):
         if kind in ("count_overflow", "imbalance"):
             raise ValueError(f"kind {kind!r} needs a tiled encoding; layer "
@@ -112,6 +115,56 @@ def corrupt_tile_encoding(plan: ModelPlan, layer: str | None = None,
         name
 
 
+SCALE_FAULTS = ("nan", "zero")
+
+
+def corrupt_scales(plan: ModelPlan, layer: str | None = None,
+                   kind: str = "nan") -> Tuple[ModelPlan, str]:
+    """Poison one quantized layer's per-block dequant scales.
+
+    ``kind="nan"`` turns a slice of the scales non-finite: every dequant
+    through them yields NaN at run time (serve's ``--guard`` must bisect
+    and quarantine the layer to the dense reference), and
+    `guard.validate_plan` flags the ``scale`` finiteness invariant.
+    ``kind="zero"`` zeroes the scales of blocks that still carry live
+    quantized values — silently wrong numerics, undetectable by a NaN
+    guard, but structurally impossible for the encoder (it never emits a
+    nonzero q against a zero scale), so `validate_plan` must flag the
+    ``scale`` zero-consistency invariant.  Returns
+    ``(corrupted_plan, layer_name)``.
+    """
+    if kind not in SCALE_FAULTS:
+        raise ValueError(f"kind must be one of {SCALE_FAULTS}, got {kind!r}")
+    if layer is None:
+        names = sorted(nm for nm, lp in plan.layers.items()
+                       if isinstance(lp.weights, TiledBalanced)
+                       and lp.weights.quant != "none")
+        if not names:
+            raise ValueError("plan has no quantized layer to corrupt")
+        name = names[len(names) // 2]
+    else:
+        name = _pick_sparse(plan, layer)
+    lp = plan.layers[name]
+    w = lp.weights
+    if not isinstance(w, TiledBalanced) or w.quant == "none" \
+            or w.scales is None:
+        raise ValueError(f"layer {name!r} carries no block-quant scales")
+    s = np.array(w.scales, np.float32)
+    flat = s.reshape(-1)
+    if kind == "nan":
+        flat[:max(1, flat.size // 4)] = np.nan
+    else:
+        cnt = np.array(w.counts).reshape(-1)
+        live = np.nonzero((cnt > 0) & (flat > 0))[0]
+        if not live.size:
+            raise ValueError(f"layer {name!r} has no live nonzero-scale "
+                             "block to zero")
+        flat[live[:max(1, live.size // 4)]] = 0.0
+    new = dataclasses.replace(w, scales=jnp.asarray(s))
+    return _replace_layer(plan, name, LayerPlan(spec=lp.spec, weights=new)), \
+        name
+
+
 def inject_nan_output(plan: ModelPlan, layer: str | None = None
                       ) -> Tuple[ModelPlan, str]:
     """Poison every encoded value of one sparse layer with NaN, so its
@@ -121,7 +174,12 @@ def inject_nan_output(plan: ModelPlan, layer: str | None = None
     name = _pick_sparse(plan, layer)
     lp = plan.layers[name]
     w = lp.weights
-    if isinstance(w, (TiledBalanced, BalancedSparse)):
+    if isinstance(w, TiledBalanced) and w.quant != "none":
+        # quantized values are integers and cannot hold NaN — poison the
+        # dequant scales instead (same runtime effect: NaN outputs)
+        new: TiledBalanced = dataclasses.replace(
+            w, scales=jnp.full_like(w.scales, jnp.nan))
+    elif isinstance(w, (TiledBalanced, BalancedSparse)):
         new = dataclasses.replace(w, values=jnp.full_like(w.values,
                                                           jnp.nan))
     else:
@@ -234,6 +292,6 @@ def force_impl_failure(*impls: str,
         kernel_ops._FORCED_FAULTS.update(prev)
 
 
-__all__ = ["TILE_FAULTS", "corrupt_tile_encoding", "inject_nan_output",
-           "truncate_shard", "bit_flip_shard", "poison_autotune_entry",
-           "force_impl_failure"]
+__all__ = ["TILE_FAULTS", "SCALE_FAULTS", "corrupt_tile_encoding",
+           "corrupt_scales", "inject_nan_output", "truncate_shard",
+           "bit_flip_shard", "poison_autotune_entry", "force_impl_failure"]

@@ -84,6 +84,79 @@ def test_validate_names_corrupt_flat_layer(kind, check):
                for v in report.violations())
 
 
+def _quant_plan(quant="int8", impls=("xla", "xla")):
+    """Multi-layer quantized ModelPlan + masked-dense refs (params layout)."""
+    layers, ref_blocks = {}, {}
+    for i, impl in enumerate(impls):
+        wm, lp = _fc_plan(key=i, impl=impl, quant=quant)
+        name = f"l{i}_{impl}"
+        layers[name] = lp
+        ref_blocks[name] = jnp.asarray(wm.T)
+    return engine_plan.ModelPlan(layers=layers, meta=()), ref_blocks
+
+
+@pytest.mark.parametrize("quant", ["int8", "int4"])
+@pytest.mark.parametrize("kind", faults.SCALE_FAULTS)
+def test_validate_names_corrupt_scales(kind, quant):
+    """Both scale injectors trip the ``scale`` invariant: ``nan`` breaks
+    finiteness, ``zero`` leaves live blocks dequantizing against a zero
+    scale (an encoding the quantizer never emits)."""
+    plan, _ = _quant_plan(quant=quant)
+    bad, name = faults.corrupt_scales(plan, kind=kind)
+    with pytest.raises(engine_guard.PlanValidationError) as ei:
+        engine_guard.validate_plan(bad, strict=True)
+    assert name in str(ei.value) and "scale" in str(ei.value)
+    report = engine_guard.validate_plan(bad, strict=False)
+    assert not report.ok
+    assert any(v.layer == name and v.check == "scale"
+               for v in report.violations())
+    # damage stays attributed to the poisoned layer
+    other = next(nm for nm in plan.layers if nm != name)
+    assert report.layers[other].ok
+
+
+def test_validate_quant_spec_encoding_mismatch():
+    """A quant spec paired with an unquantized encoding (a miswired
+    restore) trips the ``quant`` agreement check."""
+    from repro.kernels.tile_format import dequantize_tiled
+    plan, _ = _quant_plan(quant="int8")
+    name = next(iter(plan.layers))
+    lp = plan.layers[name]
+    crossed = engine_plan.LayerPlan(
+        spec=lp.spec, weights=dequantize_tiled(lp.weights))
+    bad = engine_plan.ModelPlan(layers={**dict(plan.layers), name: crossed},
+                                meta=plan.meta)
+    report = engine_guard.validate_plan(bad, strict=False)
+    assert any(v.layer == name and v.check == "quant"
+               for v in report.violations())
+
+
+def test_corrupt_scales_requires_a_quantized_layer():
+    plan, _ = _toy_plan()
+    with pytest.raises(ValueError, match="no quantized layer"):
+        faults.corrupt_scales(plan)
+
+
+def test_nan_scales_bisected_and_quarantined():
+    """A NaN dequant scale poisons the layer's output at run time; the
+    guard must bisect to it and quarantine to the dense reference — the
+    same ladder the unquantized NaN drill walks."""
+    plan, ref_blocks = _quant_plan(quant="int8", impls=("xla", "xla", "xla"))
+    x = jax.random.normal(jax.random.key(11), (4, 96))
+    poisoned, name = faults.corrupt_scales(plan, kind="nan")
+    assert not bool(jnp.isfinite(engine_execute.apply_layer(
+        x, poisoned.layers[name])).all())
+    culprits, attributable = engine_guard.locate_poisoned(
+        poisoned, _finite_oracle(x), ref_blocks=ref_blocks)
+    assert attributable and culprits == (name,)
+    fixed = engine_guard.quarantine_layers(poisoned, [name], ref_blocks)
+    assert fixed.layers[name].spec.impl == "dense"
+    assert fixed.layers[name].spec.quant == "none"
+    np.testing.assert_allclose(
+        np.asarray(engine_execute.apply_layer(x, fixed.layers[name])),
+        np.asarray(x @ ref_blocks[name]), rtol=1e-5, atol=1e-5)
+
+
 def test_validate_weights_type_mismatch():
     plan, _ = _toy_plan()
     lp_pal = plan.layers["l0_pallas"]
@@ -420,6 +493,24 @@ def test_serve_guard_quarantines_injected_nan(tmp_path):
     assert results["sparse"]["tokens_per_s"] > 0
     on_disk = json.loads(report_path.read_text())
     assert on_disk["guard"]["quarantined"] == g["quarantined"]
+
+
+@pytest.mark.slow
+def test_serve_guard_quarantines_injected_nan_quant(tmp_path):
+    """The same NaN drill on a quantized plan: the injector poisons the
+    dequant *scales* (int values can't hold NaN), the guard must still
+    bisect, quarantine to dense, and keep serving."""
+    from repro.launch import serve
+    report_path = tmp_path / "degradation.json"
+    results = serve.main(["--arch", "olmo-1b", "--smoke", "--batch", "2",
+                          "--prompt-len", "16", "--gen-steps", "2",
+                          "--sparsity", "0.5", "--quant", "int8", "--guard",
+                          "--inject-nan", "--report", str(report_path)])
+    g = results["guard"]
+    assert g["injected"] in g["quarantined"]
+    assert results["plan"]["quant"] == "int8"
+    assert results["plan"]["parity_max_abs_diff"] <= 5e-2
+    assert results["sparse"]["tokens_per_s"] > 0
 
 
 @pytest.mark.slow

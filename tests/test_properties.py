@@ -239,6 +239,105 @@ from repro.kernels.tile_format import (TiledBalanced, encode_tiled,  # noqa: E40
                                        tiled_to_flat)
 
 
+# ---------------------------------------------------------------------------
+# block-quantization invariants (tile_format quant layer)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.tile_format import (QUANT_QMAX, dequantize_tiled,  # noqa: E402
+                                       pack_int4, quantize_tiled,
+                                       unpack_int4)
+
+
+@given(st.integers(1, 6), st.integers(2, 70), st.integers(1, 10),
+       st.sampled_from([8, 16, 32]), st.sampled_from(["int8", "int4"]),
+       st.integers(0, 2 ** 31 - 1))
+def test_quantize_tiled_error_within_block_bound(o, n, k, bn, quant, seed):
+    """Per-block symmetric quant reconstructs every kept value within
+    ``scale / 2`` on arbitrary balanced masks — including non-divisible
+    N/bn tails and zero-count blocks — and the storage contract holds:
+    narrow values (int8 bytes / int4 packed nibbles), counts-shaped f32
+    scales, untouched geometry."""
+    from repro.kernels.tile_format import encode_tiled, tiled_to_dense
+    k = min(k, n)
+    w = jnp.asarray(np.random.default_rng(seed).standard_normal((o, n)),
+                    jnp.float32)
+    sp = to_balanced_sparse(w, k=k)
+    tb = encode_tiled(sp.values, sp.indices, n, bn=bn)
+    qt = quantize_tiled(tb, quant)
+    # storage contract
+    assert qt.quant == quant and qt.kb == tb.kb and qt.bn == tb.bn
+    assert qt.scales is not None and qt.scales.dtype == jnp.float32
+    assert tuple(qt.scales.shape) == tuple(qt.counts.shape)
+    np.testing.assert_array_equal(np.asarray(qt.indices),
+                                  np.asarray(tb.indices))
+    if quant == "int8":
+        assert qt.values.dtype == jnp.int8
+        assert qt.values.shape == tb.values.shape
+    else:
+        assert qt.values.dtype == jnp.uint8
+        assert qt.values.shape[-1] == -(-tb.kb // 2)
+    scales = np.asarray(qt.scales)
+    assert np.isfinite(scales).all() and (scales >= 0).all()
+    # the grid is symmetric: |q| never exceeds qmax
+    q = np.asarray(unpack_int4(qt.values, qt.kb) if quant == "int4"
+                   else qt.values)
+    assert np.abs(q.astype(np.int32)).max(initial=0) <= QUANT_QMAX[quant]
+    # reconstruction error bound: |v - q*s| <= s/2 per (row, block)
+    want = np.asarray(tb.values, np.float32)
+    got = np.asarray(dequantize_tiled(qt).values)
+    bound = scales[..., None] / 2 * (1 + 1e-5) + 1e-7
+    assert (np.abs(got - want) <= bound).all()
+    # zero-scale blocks hold all-zero q (the guard's encoder invariant)
+    # and dequantize to exact zeros, never 0/0 NaN
+    zero = scales == 0
+    if zero.any():
+        assert not np.asarray(qt.values)[zero].any()
+        assert not got[zero].any()
+    # densify routes through the same dequant reference, bit-for-bit
+    np.testing.assert_array_equal(
+        np.asarray(tiled_to_dense(qt)),
+        np.asarray(tiled_to_dense(dequantize_tiled(qt))))
+
+
+@given(st.integers(1, 5), st.integers(1, 17), st.integers(0, 2 ** 31 - 1))
+def test_pack_int4_roundtrip_odd_axes(rows, kb, seed):
+    """pack_int4/unpack_int4 is the identity on [-8, 7] for any last-axis
+    length; odd lengths gain one pad nibble that must decode to zero."""
+    q = np.random.default_rng(seed).integers(-8, 8, (rows, kb)
+                                             ).astype(np.int8)
+    packed = pack_int4(jnp.asarray(q))
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (rows, -(-kb // 2))
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed, kb)), q)
+    if kb % 2:
+        # the pad slot is the high nibble of the last byte: always zero
+        assert not (np.asarray(packed)[..., -1] >> 4).any()
+
+
+@given(st.integers(1, 5), st.integers(2, 6),
+       st.sampled_from(["int8", "int4"]), st.integers(0, 2 ** 31 - 1))
+def test_quantize_all_zero_blocks_encode_scale_zero(o, nblocks, quant, seed):
+    """Blocks whose kept values are all zero quantize to scale 0 with every
+    slot 0 — the exact encoding `engine.guard` pins as an invariant."""
+    from repro.kernels.tile_format import encode_tiled
+    bn, n = 8, 8 * nblocks
+    w = jnp.asarray(np.random.default_rng(seed).standard_normal((o, n)),
+                    jnp.float32)
+    sp = to_balanced_sparse(w, k=4)
+    tb = encode_tiled(sp.values, sp.indices, n, bn=bn)
+    # zero out every block past the first: kept slots with value 0.0
+    vals = np.asarray(tb.values).copy()
+    vals[:, 1:, :] = 0.0
+    tb = TiledBalanced(jnp.asarray(vals), tb.indices, tb.counts,
+                       n_in=tb.n_in, bn=tb.bn)
+    qt = quantize_tiled(tb, quant)
+    scales = np.asarray(qt.scales)
+    assert not scales[:, 1:].any()
+    assert not np.asarray(qt.values)[:, 1:].any()
+    deq = np.asarray(dequantize_tiled(qt).values)
+    assert np.isfinite(deq).all() and not deq[:, 1:].any()
+
+
 @given(st.integers(2, 10), st.integers(9, 40), st.integers(1, 6),
        st.integers(0, 2 ** 31 - 1))
 def test_pack_columns_roundtrip(o, n, k, seed):
