@@ -362,6 +362,35 @@ def bench_quant(shapes, *, iters, interp_m) -> dict:
     }
 
 
+def bench_dram_model() -> dict:
+    """The ``dram`` section: modeled DRAM traffic of the four paper CNNs
+    under adaptive vs fixed-RIF dataflow (`repro.launch.cost_model`,
+    DESIGN.md §14) on the zcu102 profile.  Analytical — no timing, so it
+    runs identically in smoke and full mode, and `tests/test_paper_claims`
+    pins the same figures against the paper's 1.17–1.8x ADC band."""
+    from repro.launch import cost_model
+    from repro.models.cnn import network_layers
+    dep = cost_model.DEPLOYMENTS["zcu102"]
+    nets = {}
+    for net in ("alexnet", "vgg16", "resnet50", "googlenet"):
+        layers = network_layers(net, "sense")
+        adap = cost_model.network_cost(layers, dep, adaptive=True,
+                                       scope="adc")
+        fixed = cost_model.network_cost(layers, dep, adaptive=False,
+                                        scope="adc")
+        nets[net] = {
+            "adaptive_dram_bytes": adap["total_bytes"],
+            "fixed_rif_dram_bytes": fixed["total_bytes"],
+            "reduction": cost_model.adc_reduction(layers, dep, scope="adc"),
+            "frac_rwf": adap["frac_rwf"],
+            "adaptive_energy_pj": adap["energy_pj"],
+        }
+        print(f"  {net:9s} adaptive={adap['total_bytes'] / 1e6:8.2f} MB "
+              f"fixed-RIF={fixed['total_bytes'] / 1e6:8.2f} MB "
+              f"x{nets[net]['reduction']:.2f}")
+    return {"deployment": dep.name, "scope": "adc", "networks": nets}
+
+
 # The main timing column compares real compiled code: on TPU
 # (REPRO_PALLAS_INTERPRET=0) that is the Mosaic-compiled tiled kernel; on
 # CPU it is the tiled path's XLA fallback (interpret mode is an emulator —
@@ -401,6 +430,8 @@ def main(argv=None):
     quant = bench_quant(
         QUANT_SHAPES["smoke" if args.smoke else "full"], iters=iters,
         interp_m=pallas_m)
+    print("dram (modeled, cost_model):")
+    dram = bench_dram_model()
     report = {
         "meta": {
             "bench": "balanced_spmm seed-gather vs tiled decode-and-matmul",
@@ -413,6 +444,7 @@ def main(argv=None):
         "networks": results,
         "decode": decode,
         "quant": quant,
+        "dram": dram,
     }
     report["meta"]["wall_s"] = round(time.time() - t0, 2)
     pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")

@@ -10,7 +10,12 @@ from __future__ import annotations
 import glob
 import json
 import os
+import sys
 from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch import cost_model  # noqa: E402
 
 RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
 
@@ -37,15 +42,18 @@ def load(variant: str = "v0_baseline", mesh: str | None = "pod16x16"):
     return recs
 
 
-def table(variant: str = "v0_baseline", mesh: str = "pod16x16") -> str:
+def table(variant: str = "v0_baseline", mesh: str = "pod16x16",
+          deployment: str = "tpu-host") -> str:
     recs = load(variant, mesh)
+    dep = cost_model.get_deployment(deployment)
     lines = [
         f"Roofline table — mesh={mesh}, variant={variant} "
         "(terms in ms on TPU v5e: 197 TF/s bf16, 819 GB/s HBM, "
-        "~50 GB/s ICI; per-chip quantities)",
+        "~50 GB/s ICI; per-chip quantities; dramE from "
+        f"cost_model '{dep.name}' energy table)",
         f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
         f"{'collect':>9s} {'dominant':>10s} {'rooflineF':>9s} "
-        f"{'model/hlo':>9s} {'fitsHBM':>7s}"]
+        f"{'model/hlo':>9s} {'fitsHBM':>7s} {'dramE_mJ':>9s}"]
     for r in recs:
         if r["status"] == "skipped":
             lines.append(f"{r['cell'].split('__')[0]:22s} "
@@ -56,13 +64,17 @@ def table(variant: str = "v0_baseline", mesh: str = "pod16x16") -> str:
             lines.append(f"{r['cell']}: ERROR")
             continue
         rr = r["roofline"]
+        # per-device HLO traffic priced at the deployment's DRAM energy
+        # (pJ/bit -> mJ); the same constant the plan objective minimizes
+        dram_mj = (r.get("bytes_per_device", 0) * 8
+                   * dep.energy.dram_pj_per_bit * 1e-9)
         lines.append(
             f"{r['arch']:22s} {r['shape']:12s} "
             f"{rr['compute_s']*1e3:9.2f} {rr['memory_s']*1e3:9.2f} "
             f"{rr['collective_s']*1e3:9.2f} {rr['dominant']:>10s} "
             f"{rr['roofline_fraction']:9.4f} "
             f"{r['model_flops_ratio']:9.3f} "
-            f"{str(r['fits_hbm']):>7s}")
+            f"{str(r['fits_hbm']):>7s} {dram_mj:9.2f}")
     doms = {}
     for r in recs:
         if r["status"] == "ok":

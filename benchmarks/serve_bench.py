@@ -59,6 +59,7 @@ import numpy as np                                            # noqa: E402
 from repro.configs import get_smoke                           # noqa: E402
 from repro.engine import execute as engine_execute            # noqa: E402
 from repro.engine import plan as engine_plan                  # noqa: E402
+from repro.launch import cost_model                           # noqa: E402
 from repro.launch.serve import _parity_check, traffic_mode    # noqa: E402
 from repro.models import build_model                          # noqa: E402
 
@@ -277,6 +278,75 @@ def bench_traffic(*, sparsity: float, tune: str,
     return cell
 
 
+def bench_dram(*, sparsity: float, arch: str = "olmo-1b") -> dict:
+    """The ``dram`` cell: deployment-aware plan objectives (DESIGN.md §14).
+
+    Plans the smoke-scaled arch twice on the same DRAM-constrained
+    deployment — once at the default latency objective (the paper's
+    §V-C/§VI-F rules, cost-annotated only) and once at ``objective="dram"``
+    (mode + impl co-optimized against `launch.cost_model`) — and records
+    the modeled traffic of both plus every layer whose mode/impl the
+    objective changed.  The constrained profile is *derived from the plan*:
+    its weight buffer is half the smallest layer's encoded stream, so
+    ON_CHIP capture is infeasible at every scale the smoke dims take and
+    the cell exercises the flip mechanism rather than one lucky size.
+    """
+    cfg = dataclasses.replace(get_smoke(arch), sparse_serving=True)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    base = engine_plan.plan_model(cfg, params, sparsity=sparsity)
+    streams = [lp.spec.cost.w_stream_bytes * 8
+               for lp in base.layers.values() if lp.spec.cost is not None]
+    dep = dataclasses.replace(
+        cost_model.DEPLOYMENTS["zcu102"], name="constrained",
+        weight_buffer_bits=max(1, min(streams) // 2),
+        ifm_buffer_bits=max(1, min(streams) // 2))
+    plan_lat = engine_plan.plan_model(cfg, params, sparsity=sparsity,
+                                      objective="latency", deployment=dep)
+    plan_dram = engine_plan.plan_model(cfg, params, sparsity=sparsity,
+                                       objective="dram", deployment=dep)
+    cs_lat, cs_dram = plan_lat.cost_summary(), plan_dram.cost_summary()
+    changed = {}
+    for nm in sorted(plan_lat.layers):
+        a, b = plan_lat.layers[nm].spec, plan_dram.layers[nm].spec
+        if (a.mode, a.impl) != (b.mode, b.impl):
+            changed[nm] = {"from": [a.mode, a.impl], "to": [b.mode, b.impl]}
+    strip = ("per_layer",)
+    return {
+        "arch": arch,
+        "deployment": {"name": dep.name,
+                       "weight_buffer_bits": dep.weight_buffer_bits,
+                       "ifm_buffer_bits": dep.ifm_buffer_bits},
+        "objective_latency": {k: v for k, v in cs_lat.items()
+                              if k not in strip},
+        "objective_dram": {k: v for k, v in cs_dram.items()
+                           if k not in strip},
+        "dram_reduction": (cs_lat["total_dram_bytes"]
+                           / max(cs_dram["total_dram_bytes"], 1e-12)),
+        "layers_changed": len(changed),
+        "changed": changed,
+    }
+
+
+def dram_gate_failures(cell: dict) -> list:
+    """The dram cell's pass criteria (empty == pass): the constrained
+    deployment must flip at least one layer's mode/impl, and the dram
+    objective must never model *more* traffic than the latency objective
+    on the same deployment — the objective is an argmin, so losing either
+    means the cost model stopped driving plan selection."""
+    fails = []
+    if cell.get("layers_changed", 0) < 1:
+        fails.append("dram: constrained deployment changed no layer's "
+                     "mode/impl under objective='dram'")
+    lat = (cell.get("objective_latency") or {}).get("total_dram_bytes", 0.0)
+    dra = (cell.get("objective_dram") or {}).get("total_dram_bytes",
+                                                 float("inf"))
+    if not dra <= lat:
+        fails.append(f"dram: objective='dram' models {dra:.0f} B, more "
+                     f"than latency objective's {lat:.0f} B")
+    return fails
+
+
 def traffic_gate_failures(cell: dict) -> list:
     """The traffic cell's pass criteria, as regression strings (empty ==
     pass): paged-KV logits parity must be *exactly* zero, and the
@@ -402,6 +472,13 @@ def main(argv=None):
                          "(--no-traffic to skip; the cell gates on exact "
                          "paged-KV parity and on continuous beating the "
                          "static loop)")
+    ap.add_argument("--dram", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="run the deployment-aware plan-objective cell "
+                         "(--no-dram to skip; gates on objective='dram' "
+                         "flipping >=1 layer on a constrained deployment "
+                         "and never modeling more traffic than the "
+                         "latency objective)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -447,6 +524,18 @@ def main(argv=None):
         except Exception as e:  # noqa: BLE001 - gate via failures
             failures.append(f"traffic: {type(e).__name__}: {e}")
             print(f"  traffic: FAILED — {e}")
+    dram = None
+    if args.dram:
+        print("dram (plan objectives on a constrained deployment):")
+        try:
+            dram = bench_dram(sparsity=args.sparsity)
+            failures.extend(dram_gate_failures(dram))
+            print(f"  objective=dram: {dram['layers_changed']} layer(s) "
+                  f"changed, modeled DRAM "
+                  f"{dram['dram_reduction']:.2f}x lower")
+        except Exception as e:  # noqa: BLE001 - gate via failures
+            failures.append(f"dram: {type(e).__name__}: {e}")
+            print(f"  dram: FAILED — {e}")
     report = {
         "meta": {
             "bench": "end-to-end serving: sparse plan vs masked dense",
@@ -465,6 +554,8 @@ def main(argv=None):
     }
     if traffic is not None:
         report["traffic"] = traffic
+    if dram is not None:
+        report["dram"] = dram
     pathlib.Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {args.out} ({report['meta']['wall_s']} s)")
 

@@ -13,12 +13,20 @@ the computation (a trace-time counter: under jit each compiled executable
 counts its kernels once, not once per run).  `launch/serve.py` uses it to
 assert the sparse serving path is real rather than a dense matmul on
 zeroed weights.
+
+BYTE_STATS counts the bytes each traced dispatch streams — the encoded
+weights (every leaf of the layer's weight pytree at its stored width,
+nibble-packed int4 included) plus the activation operand/result — keyed by
+layer name.  Shapes are static at trace time, so the counters are exact
+and tracer-safe; `launch.cost_model` mirrors the same accounting
+analytically and `tests/test_cost_model.py` pins the two against each
+other (the model-vs-measurement contract, DESIGN.md §14).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +36,13 @@ from ..kernels import ops as kernel_ops
 from ..kernels.sparse_conv import sparse_conv2d as _sparse_conv2d
 from ..kernels.tile_format import (TiledBalanced, dequantize_tiled,
                                    tiled_to_flat)
+# The impl-degradation ladder (most specialized first): when a layer's
+# preferred impl fails to trace/compile/lower, `engine.guard.harden_plan`
+# steps it down one rung at a time.  Dense is the floor — a plain masked
+# matmul that cannot fail for kernel reasons.  Canonically defined next to
+# the cost model (plan-time impl co-optimization moves along the same
+# ladder) and re-exported here for the execute/guard call sites.
+from ..launch.cost_model import IMPL_LADDER, pytree_nbytes
 from .plan import LayerPlan, ModelPlan
 
 Array = jax.Array
@@ -35,19 +50,41 @@ Array = jax.Array
 # trace-time dispatch counters (see module docstring)
 STATS: "collections.Counter[str]" = collections.Counter()
 
-# The impl-degradation ladder (most specialized first): when a layer's
-# preferred impl fails to trace/compile/lower, `engine.guard.harden_plan`
-# steps it down one rung at a time.  Dense is the floor — a plain masked
-# matmul that cannot fail for kernel reasons.
-IMPL_LADDER = ("pallas", "xla", "xla_gather", "dense")
+# trace-time byte counters, keyed by layer name (see module docstring)
+BYTE_STATS: Dict[str, "collections.Counter[str]"] = {}
 
 
 def reset_stats() -> None:
     STATS.clear()
+    BYTE_STATS.clear()
 
 
 def stats() -> dict:
     return dict(STATS)
+
+
+def bytes_stats() -> dict:
+    """Per-layer streamed-byte counters: ``{layer: {bytes_weights,
+    bytes_act_in, bytes_act_out, dispatches}}`` (trace-time, like STATS)."""
+    return {nm: dict(c) for nm, c in BYTE_STATS.items()}
+
+
+def _count_bytes(spec, weights: Any, x: Array, y: Array) -> None:
+    """Record one dispatch's streamed bytes.  Leaf shapes/dtypes are static
+    under jit, so this counts stored bytes exactly even on tracers.  For
+    scanned stacks the weights arrive scan-sliced, so the figure is
+    per-dispatch — the quantity `PlanSpec.cost.w_stream_bytes` models."""
+    wb = int(pytree_nbytes(weights))
+    xb = int(x.size) * x.dtype.itemsize
+    yb = int(y.size) * y.dtype.itemsize
+    c = BYTE_STATS.setdefault(spec.name, collections.Counter())
+    c["bytes_weights"] += wb
+    c["bytes_act_in"] += xb
+    c["bytes_act_out"] += yb
+    c["dispatches"] += 1
+    STATS["bytes_weights"] += wb
+    STATS["bytes_act_in"] += xb
+    STATS["bytes_act_out"] += yb
 
 
 def _count_dispatch(spec, *extra: str) -> None:
@@ -128,10 +165,13 @@ def demote_layer(lp: LayerPlan, *, to_impl: str | None = None,
             # apply_conv's dense path convolves the 4-D layout
             ci = spec.n_in // (spec.hk * spec.wk)
             weights = weights.reshape(spec.n_out, ci, spec.hk, spec.wk)
+        # re-encoding invalidates the cost provenance (byte counts change);
+        # drop the tag rather than let guard flag a stale one
         new_spec = dataclasses.replace(spec, impl="dense", k=spec.n_in,
                                        blocks=None, block_k=0,
                                        blocks_decode=None, packed=False,
-                                       quant="none", degraded_from=origin)
+                                       quant="none", degraded_from=origin,
+                                       cost=None)
         return LayerPlan(spec=new_spec, weights=weights)
     if isinstance(lp.weights, TiledBalanced) and spec.quant != "none":
         # quantized encodings keep the tiled format on every sparse rung —
@@ -139,16 +179,18 @@ def demote_layer(lp: LayerPlan, *, to_impl: str | None = None,
         # xla / xla_gather on them directly
         return LayerPlan(spec=dataclasses.replace(spec, impl=to_impl,
                                                   degraded_from=origin),
-                         weights=lp.weights)
+                         weights=lp.weights)   # same encoding: tag stays valid
     if isinstance(lp.weights, TiledBalanced):
         vals, idx = _tiled_to_flat_stacked(lp.weights)
         weights: Any = BalancedSparse(vals, idx, spec.n_in)
     else:
         weights = lp.weights             # xla <-> xla_gather share a format
-    # the flat format carries no perm: packing provenance ends here
+    # the flat format carries no perm: packing provenance ends here (and the
+    # re-encoded bytes invalidate the cost tag)
     return LayerPlan(spec=dataclasses.replace(spec, impl=to_impl,
                                               packed=False,
-                                              degraded_from=origin),
+                                              degraded_from=origin,
+                                              cost=None),
                      weights=weights)
 
 
@@ -172,8 +214,10 @@ def apply_fc(x: Array, lp: LayerPlan) -> Array:
     spec = lp.spec
     if spec.impl == "dense":
         STATS["dense_matmul"] += 1
-        return jnp.dot(x, lp.weights.T,
-                       preferred_element_type=jnp.float32).astype(x.dtype)
+        y = jnp.dot(x, lp.weights.T,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+        _count_bytes(spec, lp.weights, x, y)
+        return y
     m = 1
     for d in x.shape[:-1]:
         m *= d
@@ -185,11 +229,15 @@ def apply_fc(x: Array, lp: LayerPlan) -> Array:
         blk = spec.blocks_decode if skinny and spec.blocks_decode \
             else spec.blocks
         bm = min(blk.bm, max(8, kernel_ops.bucket_m(m)))
-        return kernel_ops.tiled_spmm(x, lp.weights, block_m=bm,
-                                     block_o=blk.bo, impl=spec.impl)
-    sp = lp.weights
-    return kernel_ops.balanced_spmm(x, sp.values, sp.indices, n_in=spec.n_in,
-                                    impl=spec.impl, block_k=spec.block_k)
+        y = kernel_ops.tiled_spmm(x, lp.weights, block_m=bm,
+                                  block_o=blk.bo, impl=spec.impl)
+    else:
+        sp = lp.weights
+        y = kernel_ops.balanced_spmm(x, sp.values, sp.indices,
+                                     n_in=spec.n_in, impl=spec.impl,
+                                     block_k=spec.block_k)
+    _count_bytes(spec, lp.weights, x, y)
+    return y
 
 
 def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
@@ -210,9 +258,11 @@ def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
     spec = lp.spec
     if spec.impl == "dense":
         STATS["dense_matmul"] += 1
-        return jnp.einsum("e...n,eon->e...o", x,
-                          lp.weights.astype(x.dtype),
-                          preferred_element_type=jnp.float32).astype(x.dtype)
+        y = jnp.einsum("e...n,eon->e...o", x,
+                       lp.weights.astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        _count_bytes(spec, lp.weights, x, y)
+        return y
     m = 1
     for d in x.shape[1:-1]:
         m *= d
@@ -224,11 +274,14 @@ def apply_expert_fc(x: Array, lp: LayerPlan) -> Array:
             else spec.blocks
         # same live-M clamp as apply_fc: m here is per-expert capacity
         bm = min(blk.bm, max(8, kernel_ops.bucket_m(m)))
-        return kernel_ops.tiled_spmm_batched(x, lp.weights, block_m=bm,
-                                             block_o=blk.bo, impl=spec.impl)
-    sp = lp.weights
-    return kernel_ops.balanced_spmm_batched(x, sp.values, sp.indices,
-                                            n_in=spec.n_in, impl=spec.impl)
+        y = kernel_ops.tiled_spmm_batched(x, lp.weights, block_m=bm,
+                                          block_o=blk.bo, impl=spec.impl)
+    else:
+        sp = lp.weights
+        y = kernel_ops.balanced_spmm_batched(x, sp.values, sp.indices,
+                                             n_in=spec.n_in, impl=spec.impl)
+    _count_bytes(spec, lp.weights, x, y)
+    return y
 
 
 def apply_conv(x: Array, lp: LayerPlan) -> Array:
@@ -242,10 +295,12 @@ def apply_conv(x: Array, lp: LayerPlan) -> Array:
         pad = spec.conv_padding
         if isinstance(pad, int):
             pad = [(pad, pad), (pad, pad)]
-        return jax.lax.conv_general_dilated(
+        y = jax.lax.conv_general_dilated(
             x, lp.weights.transpose(2, 3, 1, 0).astype(x.dtype),
             (spec.stride, spec.stride), pad,
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        _count_bytes(spec, lp.weights, x, y)
+        return y
     _count_dispatch(spec)
     if isinstance(lp.weights, TiledBalanced):
         tb = lp.weights
@@ -263,9 +318,11 @@ def apply_conv(x: Array, lp: LayerPlan) -> Array:
                                             n_in=n_in, impl=spec.impl,
                                             block_k=spec.block_k)
         vals, idx = sp.values, sp.indices
-    return _sparse_conv2d(x, vals, idx, spec.n_in, hk=spec.hk, wk=spec.wk,
-                          stride=spec.stride, padding=spec.conv_padding,
-                          matmul_fn=matmul_fn)
+    y = _sparse_conv2d(x, vals, idx, spec.n_in, hk=spec.hk, wk=spec.wk,
+                       stride=spec.stride, padding=spec.conv_padding,
+                       matmul_fn=matmul_fn)
+    _count_bytes(spec, lp.weights, x, y)
+    return y
 
 
 def apply_layer(x: Array, lp: LayerPlan) -> Array:
@@ -283,5 +340,5 @@ def apply_named(x: Array, plan: ModelPlan, name: str) -> Array:
 
 
 __all__ = ["apply_fc", "apply_expert_fc", "apply_conv", "apply_layer",
-           "apply_named", "stats", "reset_stats", "STATS", "IMPL_LADDER",
-           "next_impl", "demote_layer"]
+           "apply_named", "stats", "reset_stats", "bytes_stats", "STATS",
+           "BYTE_STATS", "IMPL_LADDER", "next_impl", "demote_layer"]

@@ -46,6 +46,7 @@ import numpy as np
 from ..core.pruning import BalancedSparse
 from ..kernels import ops as kernel_ops
 from ..kernels.tile_format import TiledBalanced
+from ..launch import cost_model as _cost
 from . import execute
 from .plan import LayerPlan, ModelPlan
 
@@ -306,6 +307,34 @@ def _check_dense(spec, w, add) -> None:
 _IMPL_FORMAT = {"pallas": TiledBalanced, "xla": BalancedSparse,
                 "xla_gather": BalancedSparse}
 
+_COST_MODES = ("RIF", "RWF", "ON_CHIP")
+
+
+def _check_cost(spec, weights, add) -> None:
+    """Cost-provenance invariants (`PlanSpec.cost`, DESIGN.md §14): the
+    stored byte accounting must match the actual weight pytree *exactly* —
+    a tag that disagrees means the plan was rebuilt or the weights swapped
+    after costing, and the serve report would lie about traffic."""
+    tag = spec.cost
+    if tag.objective not in _cost.OBJECTIVES:
+        add("cost_objective", f"unknown objective {tag.objective!r}")
+    if tag.mode not in _COST_MODES:
+        add("cost_mode", f"unknown dataflow mode {tag.mode!r}")
+    if tag.dram_bits < 0 or not np.isfinite(tag.energy_pj) \
+            or tag.energy_pj < 0 or not np.isfinite(tag.latency_s) \
+            or tag.latency_s < 0:
+        add("cost_range", f"negative/non-finite cost figures "
+            f"(dram_bits={tag.dram_bits}, energy_pj={tag.energy_pj}, "
+            f"latency_s={tag.latency_s})")
+    nbytes = _cost.pytree_nbytes(weights)
+    if tag.w_total_bytes != nbytes:
+        add("cost_bytes", f"tag w_total_bytes={tag.w_total_bytes} but "
+            f"weights hold {nbytes} bytes")
+    elif tag.w_stream_bytes <= 0 or tag.w_stream_bytes > max(nbytes, 1) \
+            or (tag.w_stream_bytes and nbytes % tag.w_stream_bytes):
+        add("cost_bytes", f"w_stream_bytes={tag.w_stream_bytes} does not "
+            f"divide the stored {nbytes} bytes")
+
 
 def validate_layer(lp: LayerPlan, name: str | None = None) -> LayerReport:
     """Structural checks for one LayerPlan (no probe).  ``name`` overrides
@@ -337,6 +366,8 @@ def validate_layer(lp: LayerPlan, name: str | None = None) -> LayerReport:
         _check_flat(spec, lp.weights, add)
     else:
         _check_dense(spec, lp.weights, add)
+    if spec.cost is not None:
+        _check_cost(spec, lp.weights, add)
     return LayerReport(name=name, impl=spec.impl,
                        violations=tuple(violations))
 

@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.dataflow import LayerSpec, choose_dataflow
+from ..core.dataflow import LayerSpec, choose_dataflow, ifm_storage_bits
 from ..core.pruning import BalancedSparse, keep_count
 from ..core.sparse_ops import SparseLinearSpec
 from ..kernels import autotune
@@ -55,6 +55,7 @@ from ..kernels import ops as kernel_ops
 from ..kernels.tile_format import (_KB_ROUND, _round_up, QUANT_MODES,
                                    TiledBalanced, encode_tiled,
                                    quantize_tiled, tiled_to_dense)
+from ..launch import cost_model as _cost
 
 Array = jax.Array
 
@@ -153,6 +154,12 @@ class PlanSpec:
     quant: str = "none"             # tile-local block-quant mode of the
                                     # encoding ("none" | "int8" | "int4");
                                     # always "none" for dense impls
+    cost: Any = None                # launch.cost_model.CostTag provenance:
+                                    # modeled per-dispatch DRAM/energy at
+                                    # the build objective + the exact
+                                    # stored byte counts the execute STATS
+                                    # counters must reproduce (None on
+                                    # pre-cost plans, e.g. plan_from_balanced)
 
     @property
     def is_sparse(self) -> bool:
@@ -308,6 +315,44 @@ class ModelPlan:
         ``quarantined``, stamped by `engine.guard.quarantine_layers`)."""
         return dict(self.meta).get("quarantined", ())
 
+    def cost_summary(self) -> Dict[str, Any]:
+        """Aggregate the per-layer `CostTag` provenance (DESIGN.md §14).
+
+        Per-dispatch figures scale by the stacked-layer count
+        (``w_total_bytes // w_stream_bytes``) so the totals cover the whole
+        model.  Layers without a tag (pre-cost plans) are skipped and
+        counted in ``untagged``.
+        """
+        meta = dict(self.meta)
+        out: Dict[str, Any] = {
+            "objective": meta.get("objective", "latency"),
+            "deployment": meta.get("deployment", ""),
+            "total_dram_bytes": 0.0, "total_energy_pj": 0.0,
+            "total_w_stream_bytes": 0, "total_act_bytes": 0,
+            "modes": {}, "untagged": 0, "per_layer": {},
+        }
+        for nm in sorted(self.layers):
+            tag = self.layers[nm].spec.cost
+            if tag is None:
+                out["untagged"] += 1
+                continue
+            if not out["deployment"]:
+                out["deployment"] = tag.deployment
+            n_disp = max(1, tag.w_total_bytes // max(tag.w_stream_bytes, 1))
+            out["total_dram_bytes"] += tag.dram_bits / 8.0 * n_disp
+            out["total_energy_pj"] += tag.energy_pj * n_disp
+            out["total_w_stream_bytes"] += tag.w_stream_bytes * n_disp
+            out["total_act_bytes"] += \
+                (tag.act_in_bytes + tag.act_out_bytes) * n_disp
+            out["modes"][tag.mode] = out["modes"].get(tag.mode, 0) + 1
+            out["per_layer"][nm] = {
+                "mode": tag.mode, "dram_bytes": tag.dram_bits / 8.0,
+                "energy_pj": tag.energy_pj, "latency_s": tag.latency_s,
+                "w_stream_bytes": tag.w_stream_bytes,
+                "dispatches": n_disp,
+            }
+        return out
+
     @property
     def sparse_layer_count(self) -> int:
         return sum(1 for lp in self.layers.values() if lp.spec.is_sparse)
@@ -351,6 +396,99 @@ def default_impl(*, balanced: bool, w_sparsity: float,
     if not balanced or not spec.use_sparse:
         return "dense"
     return "xla" if kernel_ops._INTERPRET else "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Cost-objective co-optimization (DESIGN.md §14; launch.cost_model)
+# ---------------------------------------------------------------------------
+
+def _encoded_format_bits(*, impl: str, n_out: int, n_in: int, k: int,
+                         bn: int, block_k: int, quant: str,
+                         elem_bits: int) -> int:
+    """Format-level weight-stream bits of one encoding candidate."""
+    if impl == "dense":
+        return n_out * n_in * elem_bits
+    if impl == "pallas" or quant != "none":
+        nb = -(-n_in // bn)
+        return _cost.tiled_format_bits(n_out, nb, block_k, bn,
+                                       elem_bits=elem_bits, quant=quant)
+    return _cost.flat_format_bits(n_out, k, n_in, elem_bits=elem_bits)
+
+
+def _evaluate_cost(*, objective: str, dep, layer_spec: LayerSpec | None,
+                   kind: str, m_hint: int, n_in: int, n_out: int, k: int,
+                   w_format_bits: int, quant: str,
+                   elem_bits: int) -> Dict[str, Any]:
+    """Per-mode DRAM bits + energy/latency for one (impl, encoding)
+    candidate.  Conv layers stream compressed-bitmap IFMs per the layer
+    geometry; fc layers stream a dense ``[m_hint, N]`` activation block.
+    """
+    if kind == "conv" and layer_spec is not None:
+        i_bits = ifm_storage_bits(layer_spec, elem_bits=elem_bits)
+        o_elems = layer_spec.h_o * layer_spec.w_o * layer_spec.c_o
+        o_bits = o_elems * dep.act_bits
+        psum = o_elems * dep.psum_bits
+        macs = round(layer_spec.macs * (k / max(n_in, 1)))
+    else:
+        i_bits = m_hint * n_in * dep.act_bits
+        o_bits = m_hint * n_out * dep.act_bits
+        psum = m_hint * n_out * dep.psum_bits
+        macs = m_hint * n_out * k
+    per_mode = _cost.mode_dram_bits(i_bits, w_format_bits, o_bits, psum, dep)
+    mode = min(per_mode, key=lambda m: (per_mode[m],
+                                        _cost._MODE_ORDER.index(m)))
+    d = per_mode[mode]
+    energy = _cost.layer_energy_pj(d, macs, dep, quant=quant)
+    lat = _cost.layer_latency_s(d, macs, dep)
+    return {"mode": mode, "per_mode": per_mode, "dram_bits": d,
+            "energy_pj": energy, "latency_s": lat, "macs": macs,
+            "i_bits": i_bits, "o_bits": o_bits,
+            "score": _cost.objective_score(objective, dram_bits=d,
+                                           energy_pj=energy, latency_s=lat)}
+
+
+def _format_bits_of(weights: Any, *, elem_bits: int,
+                    lead_layers: int = 1) -> int:
+    """Per-dispatch format-level bits of an encoded weights pytree (the
+    scanned leading axis divides out; expert axes stay in the dispatch)."""
+    if isinstance(weights, TiledBalanced):
+        o, nb, kb = weights.indices.shape[-3:]
+        g = int(np.prod(weights.indices.shape[:-3])) if \
+            weights.indices.ndim > 3 else 1
+        per = _cost.tiled_format_bits(o, nb, kb, weights.bn,
+                                      elem_bits=elem_bits,
+                                      quant=weights.quant)
+    elif isinstance(weights, BalancedSparse):
+        o, k = weights.indices.shape[-2:]
+        g = int(np.prod(weights.indices.shape[:-2])) if \
+            weights.indices.ndim > 2 else 1
+        per = _cost.flat_format_bits(o, k, weights.n_in,
+                                     elem_bits=elem_bits)
+    else:                                # dense array (fc 2-D or conv 4-D)
+        g = 1
+        per = int(weights.size) * elem_bits
+    return per * g // max(1, lead_layers)
+
+
+def _tag_for(*, objective: str, dep, ev: Dict[str, Any], mode: str,
+             quant: str, weights: Any, lead_layers: int, m_hint: int,
+             n_in: int, n_out: int, itemsize: int) -> "_cost.CostTag":
+    """Stamp the provenance record at ``mode`` (the spec's mode — under the
+    latency objective that is the §V-C choice, which the deployment's
+    buffers may not even admit; fall back to the model's own pick then),
+    plus the *exact* stored byte counts the execute STATS must reproduce."""
+    d = ev["per_mode"].get(mode, ev["dram_bits"])
+    w_total = _cost.pytree_nbytes(weights)
+    return _cost.CostTag(
+        objective=objective, deployment=dep.name, mode=mode,
+        w_stream_bytes=w_total // max(1, lead_layers),
+        w_total_bytes=w_total,
+        act_in_bytes=m_hint * n_in * itemsize,
+        act_out_bytes=m_hint * n_out * itemsize,
+        dram_bits=int(d),
+        energy_pj=float(_cost.layer_energy_pj(d, ev["macs"], dep,
+                                              quant=quant)),
+        latency_s=float(_cost.layer_latency_s(d, ev["macs"], dep)))
 
 
 # ---------------------------------------------------------------------------
@@ -400,7 +538,9 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                      dtype=None, stride: int = 1,
                      conv_padding: Any = "SAME", tune: str = "off",
                      tune_cache: str | None = None,
-                     pack: bool = True, quant: str = "none") -> LayerPlan:
+                     pack: bool = True, quant: str = "none",
+                     objective: str = "latency",
+                     deployment: Any = None) -> LayerPlan:
     """Derive one LayerPlan from a dense weight (output-major ``[O, N]`` for
     fc, ``[Co, Ci, Hk, Wk]`` for conv) and an optional pruning mask.
 
@@ -427,6 +567,14 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
     impl — the quantized scales live tile-locally, so the XLA fallbacks
     keep the tiled format too) and quantize per bn-block
     (`tile_format.quantize_tiled`); dense layers ignore it.
+
+    ``objective``/``deployment`` select the plan objective (DESIGN.md §14):
+    ``"latency"`` (the default) keeps today's §V-C / §VI-F selection rules
+    bit-for-bit and only *annotates* the spec with `PlanSpec.cost`;
+    ``"dram"`` / ``"energy"`` / ``"balanced"`` co-optimize the dataflow
+    mode and the impl (sparse encoding vs dense stream, never promoting up
+    the ladder) against `launch.cost_model`'s per-component accounting for
+    the named `DeploymentProfile`.
     """
     if quant not in QUANT_MODES:
         raise ValueError(f"quant must be one of {QUANT_MODES}, "
@@ -489,6 +637,34 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
         impl = "dense"
 
     dt = dtype or w2.dtype
+    dep = _cost.get_deployment(deployment)
+    if objective not in _cost.OBJECTIVES:
+        raise ValueError(f"objective must be one of {_cost.OBJECTIVES}, "
+                         f"got {objective!r}")
+    if objective != "latency" and impl != "dense":
+        # Impl co-optimization: flip to the dense stream when it scores
+        # better under the objective (format-level comparison at the
+        # static block choice; packing can only shrink the sparse side, so
+        # a sparse win here is conservative).  Never promotes up the ladder.
+        blk0 = autotune.resolve_blocks(
+            m_hint, o, n, k, itemsize=jnp.dtype(dt).itemsize, impl=impl,
+            tune="off", dtype=dt, quant=quant).blocks
+        bk0 = max(_KB_ROUND,
+                  _round_up(mask_block_k(pattern, bn=blk0.bn), _KB_ROUND))
+        ev_s = _evaluate_cost(
+            objective=objective, dep=dep, layer_spec=layer_spec, kind=kind,
+            m_hint=m_hint, n_in=n, n_out=o, k=k,
+            w_format_bits=_encoded_format_bits(
+                impl=impl, n_out=o, n_in=n, k=k, bn=blk0.bn, block_k=bk0,
+                quant=quant, elem_bits=elem_bits),
+            quant=quant, elem_bits=elem_bits)
+        ev_d = _evaluate_cost(
+            objective=objective, dep=dep, layer_spec=layer_spec, kind=kind,
+            m_hint=m_hint, n_in=n, n_out=o, k=n,
+            w_format_bits=o * n * elem_bits, quant="none",
+            elem_bits=elem_bits)
+        if ev_d["score"] < ev_s["score"]:
+            impl = "dense"
     blocks = None
     blocks_decode = None
     block_k = 0
@@ -536,7 +712,21 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
         else:
             weights = BalancedSparse(vals, idx, n)
 
-    spec = PlanSpec(name=name, kind=kind, impl=impl, mode=flow.mode,
+    # -- cost provenance (DESIGN.md §14) ------------------------------------
+    # Final evaluation runs on the *actual* encoding (post-pack block_k /
+    # tile counts), not the pre-encoding estimate the impl flip used.
+    ev = _evaluate_cost(objective=objective, dep=dep, layer_spec=layer_spec,
+                        kind=kind, m_hint=m_hint, n_in=n, n_out=o, k=int(k),
+                        w_format_bits=_format_bits_of(weights,
+                                                      elem_bits=elem_bits),
+                        quant=quant, elem_bits=elem_bits)
+    mode = flow.mode if objective == "latency" else ev["mode"]
+    tag = _tag_for(objective=objective, dep=dep, ev=ev, mode=mode,
+                   quant=quant, weights=weights, lead_layers=1,
+                   m_hint=int(m_hint), n_in=n, n_out=o,
+                   itemsize=jnp.dtype(dt).itemsize)
+
+    spec = PlanSpec(name=name, kind=kind, impl=impl, mode=mode,
                     n_in=n, n_out=o, k=int(k), block_k=block_k,
                     blocks=blocks, w_sparsity=float(w_sparsity),
                     d_mem_bits=int(flow.d_mem_bits), i_mem_bits=int(flow.i_mem),
@@ -544,7 +734,7 @@ def build_layer_plan(name: str, w: Array, *, mask: Array | None = None,
                     conv_padding=conv_padding, tuned=tuned,
                     blocks_static=blocks_static, m_hint=int(m_hint),
                     decode_m=int(decode_m), blocks_decode=blocks_decode,
-                    packed=packed, pack_kb=pack_kb, quant=quant)
+                    packed=packed, pack_kb=pack_kb, quant=quant, cost=tag)
     return LayerPlan(spec=spec, weights=weights)
 
 
@@ -594,7 +784,8 @@ def plan_smallcnn(cfg, params: dict, masks: dict | None = None, *,
                   weight_buffer_bits: int | None = None,
                   m_hint: int = 4096, tune: str = "off",
                   tune_cache: str | None = None,
-                  quant: str = "none") -> ModelPlan:
+                  quant: str = "none", objective: str = "latency",
+                  deployment: Any = None) -> ModelPlan:
     """One offline pass over the small CNN: conv layers with balanced masks
     go through the sparse conv path, balanced fc masks through the balanced
     GEMM, everything else stays dense (mask still applied)."""
@@ -611,15 +802,18 @@ def plan_smallcnn(cfg, params: dict, masks: dict | None = None, *,
             name, params[name], mask=masks.get(name), layer_spec=geom,
             m_hint=m_hint, impl=impl, ifm_sparsity=ifm_sparsity,
             weight_buffer_bits=weight_buffer_bits, conv_padding="SAME",
-            tune=tune, tune_cache=tune_cache, quant=quant)
+            tune=tune, tune_cache=tune_cache, quant=quant,
+            objective=objective, deployment=deployment)
         cin = cout
     for name in ("fc1", "fc2"):
         layers[name] = build_layer_plan(
             name, params[name], mask=masks.get(name), kind="fc",
             m_hint=m_hint, impl=impl, ifm_sparsity=ifm_sparsity,
             weight_buffer_bits=weight_buffer_bits, tune=tune,
-            tune_cache=tune_cache, quant=quant)
-    meta = (("model", "smallcnn"),) + _tune_meta(tune, layers)
+            tune_cache=tune_cache, quant=quant,
+            objective=objective, deployment=deployment)
+    meta = (("model", "smallcnn"),) + _cost_meta(objective, deployment) \
+        + _tune_meta(tune, layers)
     return ModelPlan(layers=layers, meta=meta)
 
 
@@ -641,7 +835,9 @@ ZAMBA2_PROJ_NAMES = ("z_proj", "x_proj", "out_proj")
 def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                   m_hint: int, cd, tune: str = "off",
                   tune_cache: str | None = None, decode_m: int = 4,
-                  pack: bool = True, quant: str = "none") -> LayerPlan:
+                  pack: bool = True, quant: str = "none",
+                  objective: str = "latency",
+                  deployment: Any = None) -> LayerPlan:
     """Plan one stacked projection ``[*lead, n_in, n_out]``.
 
     ``lead`` is any tuple of stacked axes — ``(L,)`` for scanned layers,
@@ -669,6 +865,7 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
     if quant not in QUANT_MODES:
         raise ValueError(f"quant must be one of {QUANT_MODES}, "
                          f"got {quant!r}")
+    cd = jnp.dtype(cd)  # accept dtype classes (jnp.bfloat16) and instances
     lead = w.shape[:-2]
     n_in, n_out = w.shape[-2:]
     g = int(np.prod(lead)) if lead else 1
@@ -686,6 +883,38 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
     order = jnp.argsort(-jnp.abs(wt), axis=-1, stable=True)
     ranks = jnp.argsort(order, axis=-1, stable=True)
     masks = np.asarray(ranks < k)                         # [g, O, N] bool
+    dep = _cost.get_deployment(deployment)
+    if objective not in _cost.OBJECTIVES:
+        raise ValueError(f"objective must be one of {_cost.OBJECTIVES}, "
+                         f"got {objective!r}")
+    lead0 = int(lead[0]) if lead else 1       # dispatches per scan step
+    g_disp = g // lead0                       # slices per dispatch (experts)
+    elem_bits = cd.itemsize * 8
+    if objective != "latency" and impl_nm != "dense":
+        # Impl co-optimization at the static block choice (same comparison
+        # as build_layer_plan; per-dispatch basis so the scanned lead axis
+        # divides out).  Never promotes up the ladder.
+        blk0 = autotune.resolve_blocks(m_hint, n_out, n_in, k,
+                                       itemsize=cd.itemsize, impl=impl_nm,
+                                       tune="off", dtype=cd,
+                                       quant=quant).blocks
+        bk0 = max(_KB_ROUND, _round_up(
+            mask_block_k(masks.reshape(g * n_out, n_in), bn=blk0.bn),
+            _KB_ROUND))
+        ev_s = _evaluate_cost(
+            objective=objective, dep=dep, layer_spec=None, kind="fc",
+            m_hint=m_hint, n_in=n_in, n_out=n_out, k=k,
+            w_format_bits=g_disp * _encoded_format_bits(
+                impl=impl_nm, n_out=n_out, n_in=n_in, k=k, bn=blk0.bn,
+                block_k=bk0, quant=quant, elem_bits=elem_bits),
+            quant=quant, elem_bits=elem_bits)
+        ev_d = _evaluate_cost(
+            objective=objective, dep=dep, layer_spec=None, kind="fc",
+            m_hint=m_hint, n_in=n_in, n_out=n_out, k=n_in,
+            w_format_bits=g_disp * n_out * n_in * elem_bits, quant="none",
+            elem_bits=elem_bits)
+        if ev_d["score"] < ev_s["score"]:
+            impl_nm = "dense"
     tuned = "static"
     blk_static = None
     blk_dec = None
@@ -748,7 +977,19 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                                      c_o=n_out,
                                      w_sparsity=1.0 - k / n_in))
     experts = int(lead[1]) if len(lead) > 1 else 0
-    spec = PlanSpec(name=nm, kind="fc", impl=impl_nm, mode=flow.mode,
+    ev = _evaluate_cost(objective=objective, dep=dep, layer_spec=None,
+                        kind="fc", m_hint=m_hint, n_in=n_in, n_out=n_out,
+                        k=k if impl_nm != "dense" else n_in,
+                        w_format_bits=_format_bits_of(weights,
+                                                      elem_bits=elem_bits,
+                                                      lead_layers=lead0),
+                        quant=quant, elem_bits=elem_bits)
+    mode = flow.mode if objective == "latency" else ev["mode"]
+    tag = _tag_for(objective=objective, dep=dep, ev=ev, mode=mode,
+                   quant=quant, weights=weights, lead_layers=lead0,
+                   m_hint=int(m_hint), n_in=n_in, n_out=n_out,
+                   itemsize=cd.itemsize)
+    spec = PlanSpec(name=nm, kind="fc", impl=impl_nm, mode=mode,
                     n_in=n_in, n_out=n_out, k=k, block_k=block_k,
                     blocks=blk, w_sparsity=1.0 - k / n_in,
                     d_mem_bits=int(flow.d_mem_bits) * g,
@@ -757,8 +998,19 @@ def _plan_stacked(nm: str, w: Array, *, sparsity: float, impl: str | None,
                     experts=experts, tuned=tuned, blocks_static=blk_static,
                     m_hint=int(m_hint), decode_m=int(decode_m),
                     blocks_decode=blk_dec, packed=packed, pack_kb=pack_kb,
-                    quant=quant)
+                    quant=quant, cost=tag)
     return LayerPlan(spec=spec, weights=weights)
+
+
+def _cost_meta(objective: str, deployment: Any) -> Tuple:
+    """Hashable meta entries recording the plan objective.  Empty at the
+    default (latency objective, default deployment) so pre-cost plan metas
+    stay byte-identical; `ModelPlan.cost_summary` falls back to the
+    defaults when the entries are absent."""
+    if objective == "latency" and deployment is None:
+        return ()
+    return (("objective", objective),
+            ("deployment", _cost.get_deployment(deployment).name))
 
 
 def _tune_meta(tune: str, layers: Dict[str, LayerPlan]) -> Tuple:
@@ -794,7 +1046,8 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
                      m_hint: int | None = None, decode_m: int | None = None,
                      pack: bool = True, tune: str = "off",
                      tune_cache: str | None = None,
-                     quant: str = "none") -> ModelPlan:
+                     quant: str = "none", objective: str = "latency",
+                     deployment: Any = None) -> ModelPlan:
     """Offline plan for a transformer's projection matrices.
 
     Stacked 2-D projections ``[L, n_in, n_out]`` go through `_plan_stacked`;
@@ -823,7 +1076,8 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
         layers[nm] = _plan_stacked(nm, w, sparsity=sparsity, impl=impl,
                                    m_hint=m_hint, cd=cd, tune=tune,
                                    tune_cache=tune_cache, decode_m=decode_m,
-                                   pack=pack, quant=quant)
+                                   pack=pack, quant=quant,
+                                   objective=objective, deployment=deployment)
     if include_mlp and include_experts and cfg.family == "moe":
         for nm in MOE_EXPERT_NAMES:
             w = blocks.get(nm)
@@ -833,10 +1087,12 @@ def plan_transformer(cfg, params: dict, *, sparsity: float | None = None,
                                        m_hint=m_hint, cd=cd, tune=tune,
                                        tune_cache=tune_cache,
                                        decode_m=decode_m, pack=pack,
-                                       quant=quant)
+                                       quant=quant, objective=objective,
+                                       deployment=deployment)
     meta = (("model", cfg.name), ("sparsity", float(sparsity)),
             ("n_layers", int(cfg.n_layers)),
-            ("quant", quant)) + _tune_meta(tune, layers)
+            ("quant", quant)) + _cost_meta(objective, deployment) \
+        + _tune_meta(tune, layers)
     return ModelPlan(layers=layers, meta=meta)
 
 
@@ -844,7 +1100,8 @@ def plan_rwkv6(cfg, params: dict, *, sparsity: float | None = None,
                impl: str | None = None, m_hint: int | None = None,
                decode_m: int | None = None, pack: bool = True,
                tune: str = "off", tune_cache: str | None = None,
-               quant: str = "none") -> ModelPlan:
+               quant: str = "none", objective: str = "latency",
+               deployment: Any = None) -> ModelPlan:
     """Offline plan for the RWKV6 projection family (R/K/V/G/O time-mix
     plus channel-mix matrices).  The WKV recurrence itself is elementwise
     and stays dense — the exact analogue of the paper leaving non-CONV/FC
@@ -857,11 +1114,13 @@ def plan_rwkv6(cfg, params: dict, *, sparsity: float | None = None,
     layers = {nm: _plan_stacked(nm, blocks[nm], sparsity=sparsity, impl=impl,
                                 m_hint=m_hint, cd=cd, tune=tune,
                                 tune_cache=tune_cache, decode_m=decode_m,
-                                pack=pack, quant=quant)
+                                pack=pack, quant=quant, objective=objective,
+                                deployment=deployment)
               for nm in RWKV6_PROJ_NAMES if nm in blocks}
     meta = (("model", cfg.name), ("sparsity", float(sparsity)),
             ("n_layers", int(cfg.n_layers)),
-            ("quant", quant)) + _tune_meta(tune, layers)
+            ("quant", quant)) + _cost_meta(objective, deployment) \
+        + _tune_meta(tune, layers)
     return ModelPlan(layers=layers, meta=meta)
 
 
@@ -869,7 +1128,8 @@ def plan_zamba2(cfg, params: dict, *, sparsity: float | None = None,
                 impl: str | None = None, m_hint: int | None = None,
                 decode_m: int | None = None, pack: bool = True,
                 tune: str = "off", tune_cache: str | None = None,
-                quant: str = "none") -> ModelPlan:
+                quant: str = "none", objective: str = "latency",
+                deployment: Any = None) -> ModelPlan:
     """Offline plan for the Zamba2 Mamba-block in/out projections (z/x in,
     out_proj).  The SSD recurrence, depthwise convs and the small B/C/dt
     heads stay dense; the shared attention block is a single (non-stacked)
@@ -882,11 +1142,13 @@ def plan_zamba2(cfg, params: dict, *, sparsity: float | None = None,
     layers = {nm: _plan_stacked(nm, blocks[nm], sparsity=sparsity, impl=impl,
                                 m_hint=m_hint, cd=cd, tune=tune,
                                 tune_cache=tune_cache, decode_m=decode_m,
-                                pack=pack, quant=quant)
+                                pack=pack, quant=quant, objective=objective,
+                                deployment=deployment)
               for nm in ZAMBA2_PROJ_NAMES if nm in blocks}
     meta = (("model", cfg.name), ("sparsity", float(sparsity)),
             ("n_layers", int(cfg.n_layers)),
-            ("quant", quant)) + _tune_meta(tune, layers)
+            ("quant", quant)) + _cost_meta(objective, deployment) \
+        + _tune_meta(tune, layers)
     return ModelPlan(layers=layers, meta=meta)
 
 
@@ -904,6 +1166,12 @@ def plan_model(cfg, params: dict, **kwargs) -> ModelPlan:
     (``"off" | "cached" | "sweep"``) and ``tune_cache`` (cache file path);
     ``include_mlp``/``include_experts`` apply to transformer families only
     and are dropped for the recurrent planners.
+
+    ``objective`` ("latency" | "dram" | "energy" | "balanced") and
+    ``deployment`` (a `launch.cost_model.DeploymentProfile` or its name)
+    select the plan objective: non-latency objectives co-optimize dataflow
+    mode and impl against the analytical cost model, and every spec carries
+    `PlanSpec.cost` provenance (`ModelPlan.cost_summary()` aggregates it).
     """
     from ..models.api import TRANSFORMER_FAMILIES
     if cfg.family in TRANSFORMER_FAMILIES:

@@ -34,6 +34,7 @@ from ..distributed.sharding import tree_shardings  # noqa: E402
 from ..models import build_model  # noqa: E402
 from ..models.api import batch_partition_spec, input_specs  # noqa: E402
 from ..optim import AdamWConfig, adamw_init, adamw_update  # noqa: E402
+from . import cost_model  # noqa: E402
 from . import hlo_cost  # noqa: E402
 from .mesh import (HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
                    make_production_mesh)
@@ -43,16 +44,17 @@ RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
-                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+# Canonical width table shared with hlo_cost.py / benchmarks/roofline.py
+# (this local copy used to miss the s4/u4 and f8 rows entirely, silently
+# dropping quantized-path traffic from the roofline inputs).
+_DTYPE_BYTES = {k: bits / 8 for k, bits in cost_model.DTYPE_BITS.items()}
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
 def _shape_bytes(type_str: str) -> int:
     """Bytes of one HLO shape string, e.g. 'f32[16,128]' or a tuple."""
-    total = 0
+    total = 0.0
     for m in _SHAPE_RE.finditer(type_str):
         dt, dims = m.group(1), m.group(2)
         if dt not in _DTYPE_BYTES:
@@ -62,7 +64,7 @@ def _shape_bytes(type_str: str) -> int:
             if d:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dt]
-    return total
+    return int(total)
 
 
 def collective_bytes(hlo_text: str) -> dict:

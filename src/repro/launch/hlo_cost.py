@@ -22,10 +22,13 @@ import dataclasses
 import re
 from typing import Dict
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
-                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
-                "s4": 1, "u4": 1}
+from .cost_model import DTYPE_BITS
+
+# One canonical width table (launch.cost_model.DTYPE_BITS) shared with
+# dryrun.py and benchmarks/roofline.py — the tables used to disagree on the
+# sub-byte paths (s4 counted a full byte here, was absent in dryrun).
+# Fractional bytes are intentional: XLA packs int4 two-per-byte.
+_DTYPE_BYTES = {k: bits / 8 for k, bits in DTYPE_BITS.items()}
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
@@ -63,7 +66,7 @@ def _elems(type_str: str) -> int:
 
 
 def _bytes(type_str: str) -> int:
-    total = 0
+    total = 0.0
     for m in _SHAPE_RE.finditer(type_str):
         dt = m.group(1)
         if dt not in _DTYPE_BYTES:
@@ -72,7 +75,7 @@ def _bytes(type_str: str) -> int:
         for d in _dims(m.group(2)):
             n *= d
         total += n * _DTYPE_BYTES[dt]
-    return total
+    return int(total)
 
 
 @dataclasses.dataclass

@@ -37,6 +37,7 @@ from ..configs import ARCHS, get_config, get_smoke
 from ..core.compression import compressed_bits
 from ..engine import execute as engine_execute
 from ..engine import plan as engine_plan
+from . import cost_model
 
 
 def greedy_generate(bundle, params, prompt, steps: int, max_len: int, *,
@@ -315,6 +316,19 @@ def main(argv=None):
     ap.add_argument("--report", default=None,
                     help="write the serve report (incl. guard/degradation "
                          "events) to this JSON file")
+    ap.add_argument("--objective", choices=list(cost_model.OBJECTIVES),
+                    default="latency",
+                    help="plan objective (launch.cost_model, DESIGN.md "
+                         "§14): 'latency' keeps the paper's §V-C/§VI-F "
+                         "rules and only annotates cost provenance; "
+                         "'dram'/'energy'/'balanced' co-optimize the "
+                         "dataflow mode + impl against the analytical "
+                         "DRAM/energy model for the chosen deployment")
+    ap.add_argument("--deployment", choices=sorted(cost_model.DEPLOYMENTS),
+                    default=None,
+                    help="deployment profile the cost objective evaluates "
+                         "against (buffer sizes, DRAM bandwidth, energy "
+                         "table; default zcu102)")
     ap.add_argument("--traffic", action="store_true",
                     help="continuous-batching serving under a seeded "
                          "Poisson arrival scenario (serving/): paged-KV "
@@ -352,7 +366,8 @@ def main(argv=None):
                        impl=None if args.impl == "auto" else args.impl,
                        m_hint=args.batch * args.prompt_len,
                        tune=args.tune, tune_cache=args.tune_cache,
-                       quant=args.quant)
+                       quant=args.quant, objective=args.objective,
+                       deployment=args.deployment)
     from ..models.api import TRANSFORMER_FAMILIES
     if cfg.family in TRANSFORMER_FAMILIES:
         plan_kwargs["include_mlp"] = not args.attn_only
@@ -494,6 +509,7 @@ def main(argv=None):
         total_nnz += s.k * s.n_out * mult
     dense_bits = total_numel * 16
     comp_bits = compressed_bits(total_numel, total_nnz, elem_bits=16)
+    cost = plan.cost_summary()
     results["plan"] = {
         "family": cfg.family, "quant": args.quant,
         "mode_mix": plan.mode_mix(), "impl_mix": plan.impl_mix(),
@@ -502,7 +518,14 @@ def main(argv=None):
         "tune": {"mode": args.tune, "sources": plan.tuned_mix(),
                  "deltas": [[nm, list(t), list(s)]
                             for nm, t, s in plan.tune_deltas()]},
+        "cost": cost,
     }
+    print(f"[serve/cost] objective={cost['objective']} "
+          f"deployment={cost['deployment'] or 'zcu102'}: modeled DRAM "
+          f"{cost['total_dram_bytes'] / 1e6:.2f} MB, energy "
+          f"{cost['total_energy_pj'] / 1e9:.3f} mJ, weight stream "
+          f"{cost['total_w_stream_bytes'] / 1e6:.2f} MB "
+          f"(modes {cost['modes']})")
     if guard_report is not None:
         guard_report["degraded_mix"] = plan.degraded_mix()
         results["guard"] = guard_report

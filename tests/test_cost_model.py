@@ -1,0 +1,367 @@
+"""Cost-model tests (DESIGN.md §14): dtype-table unification, per-mode
+DRAM accounting, format-bits exactness against the concrete tile encoder,
+latency-objective plan identity, the model-vs-measurement byte contract
+(analytical weight-stream bytes == execute STATS counters, exact), the
+dram-objective mode flip at LLM dims, guard validation of stale cost
+tags, and a slow-marked measured-latency rank-agreement check."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pruning import balanced_prune_conv, balanced_prune_rows
+from repro.engine import execute as engine_execute
+from repro.engine import guard as engine_guard
+from repro.engine import plan as engine_plan
+from repro.kernels.tile_format import (encode_tiled, max_block_count,
+                                       quantize_tiled, tiled_storage_bits)
+from repro.launch import cost_model
+from repro.launch.cost_model import (DEPLOYMENTS, CostTag, gemm_layer_cost,
+                                     mode_dram_bits, pytree_nbytes,
+                                     tiled_format_bits)
+
+ZCU102 = DEPLOYMENTS["zcu102"]
+
+
+# ---------------------------------------------------------------------------
+# dtype-table unification (hlo_cost / dryrun / cost_model must agree)
+# ---------------------------------------------------------------------------
+
+def test_dtype_tables_unified():
+    """hlo_cost and dryrun derive their byte tables from DTYPE_BITS; the
+    three must agree on every dtype (they used to disagree on s4)."""
+    from repro.launch import dryrun, hlo_cost
+    for name, bits in cost_model.DTYPE_BITS.items():
+        assert hlo_cost._DTYPE_BYTES[name] == bits / 8.0, name
+        assert dryrun._DTYPE_BYTES[name] == bits / 8.0, name
+        assert cost_model.dtype_bytes(name) == bits / 8.0, name
+
+
+def test_dtype_pins():
+    """Pin the widths HLO cost walks actually depend on — including the
+    sub-byte path (int4 packs two per byte, not one)."""
+    assert cost_model.dtype_bytes("bf16") == 2
+    assert cost_model.dtype_bytes("f32") == 4
+    assert cost_model.dtype_bytes("s8") == 1
+    assert cost_model.dtype_bytes("s4") == 0.5
+    assert cost_model.dtype_bits(jnp.dtype(jnp.bfloat16)) == 16
+    with pytest.raises(KeyError):
+        cost_model.dtype_bits("q3_k_m")
+
+
+# ---------------------------------------------------------------------------
+# per-mode DRAM accounting
+# ---------------------------------------------------------------------------
+
+def test_mode_dram_bits_resident_weights():
+    """Weights that fit the buffer: ON_CHIP available and equal to the
+    stream-once floor i + w + o; RIF equals it when the IFM also fits."""
+    i, w, o = 10_000, 100_000, 5_000
+    costs = mode_dram_bits(i, w, o, 2 * o, ZCU102)
+    assert costs["ON_CHIP"] == i + w + o
+    assert costs["RIF"] == i + w + o
+    assert cost_model.pick_mode(costs) == "ON_CHIP"
+
+
+def test_mode_dram_bits_chunked_weights():
+    """Weights at 3x the buffer: ON_CHIP infeasible, RIF re-streams the
+    weight set per IFM chunk, RWF re-streams IFMs per weight chunk and
+    spills psums for every chunk beyond the first."""
+    dep = dataclasses.replace(ZCU102, weight_buffer_bits=1000,
+                              ifm_buffer_bits=1000)
+    i, w, o, p = 2_500, 3_000, 400, 800
+    costs = mode_dram_bits(i, w, o, p, dep)
+    assert "ON_CHIP" not in costs
+    assert costs["RIF"] == i + w * 3 + o            # n_i = ceil(2500/1000)
+    assert costs["RWF"] == w + i * 3 + o + 2 * 2 * p  # n_w = 3
+    assert all(v > 0 for v in costs.values())
+
+
+def test_mode_dram_bits_gemv_collapse():
+    """fc GEMV: no weight-reuse dimension exists, so every feasible mode
+    streams exactly i + w + o."""
+    costs = mode_dram_bits(100, 10_000, 50, 100, ZCU102, gemv=True)
+    assert set(costs.values()) == {100 + 10_000 + 50}
+
+
+@pytest.mark.parametrize("scale", [2, 8, 64])
+def test_mode_dram_bits_monotone_in_weights(scale):
+    """Growing the weight stream can never reduce any mode's traffic."""
+    dep = dataclasses.replace(ZCU102, weight_buffer_bits=4096,
+                              ifm_buffer_bits=4096)
+    small = mode_dram_bits(10_000, 1_000, 500, 1_000, dep)
+    big = mode_dram_bits(10_000, 1_000 * scale, 500, 1_000, dep)
+    for mode, v in big.items():
+        if mode in small:
+            assert v >= small[mode]
+
+
+# ---------------------------------------------------------------------------
+# format bits: shape-level model == concrete encoder, exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", ["none", "int8", "int4"])
+@pytest.mark.parametrize("o,n,k,bn", [(8, 64, 16, 16), (16, 128, 32, 32),
+                                      (12, 96, 24, 16)])
+def test_tiled_format_bits_match_encoder(o, n, k, bn, quant):
+    """`cost_model.tiled_format_bits` (shapes only) must equal
+    `tile_format.tiled_storage_bits` (concrete encoding) bit for bit —
+    including the quantized layouts with their per-block scales."""
+    w = jax.random.normal(jax.random.key(o * n + k), (o, n))
+    _, mask = balanced_prune_rows(w, 1.0 - k / n)
+    idx = np.argsort(-np.asarray(mask), axis=1, kind="stable")[:, :k]
+    idx = np.sort(idx, axis=1).astype(np.int32)
+    vals = jnp.take_along_axis(w, jnp.asarray(idx), axis=1)
+    kb = max_block_count(idx, n, bn)
+    tb = encode_tiled(vals, idx, n, bn=bn, kb=kb)
+    if quant != "none":
+        tb = quantize_tiled(tb, quant)
+    want = tiled_storage_bits(tb, elem_bits=16)
+    got = tiled_format_bits(tb.n_out, tb.nb, tb.kb, tb.bn,
+                            elem_bits=16, quant=quant)
+    assert got == want
+
+
+def test_flat_format_bits_formula():
+    got = cost_model.flat_format_bits(16, 32, 128, elem_bits=16)
+    assert got == 16 * 32 * (16 + 7)  # ceil(log2 128) = 7 index bits
+
+
+# ---------------------------------------------------------------------------
+# latency objective reproduces today's plans byte-for-byte
+# ---------------------------------------------------------------------------
+
+def _smallcnn_setup():
+    from repro.models.cnn import SmallCNNConfig, smallcnn_init
+    cfg = SmallCNNConfig(channels=(8, 16), img=16, fc_hidden=32)
+    params = smallcnn_init(cfg, jax.random.key(0))
+    masks = {}
+    for i in range(len(cfg.channels)):
+        _, masks[f"conv{i}"] = balanced_prune_conv(params[f"conv{i}"], 0.5)
+    _, masks["fc1"] = balanced_prune_rows(params["fc1"], 0.8)
+    return cfg, params, masks
+
+
+def test_latency_objective_plan_identity():
+    """objective=\"latency\" is the default path: explicit latency plans
+    must equal default plans exactly — same specs (mode and impl
+    included), byte-identical weights, same meta."""
+    cfg, params, masks = _smallcnn_setup()
+    p1 = engine_plan.plan_smallcnn(cfg, params, masks)
+    p2 = engine_plan.plan_smallcnn(cfg, params, masks,
+                                   objective="latency")
+    assert p1.meta == p2.meta
+    assert p1.layers.keys() == p2.layers.keys()
+    for nm in p1.layers:
+        assert p1.layers[nm].spec == p2.layers[nm].spec
+        for a, b in zip(jax.tree_util.tree_leaves(p1.layers[nm].weights),
+                        jax.tree_util.tree_leaves(p2.layers[nm].weights)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # every planned layer carries latency-objective cost provenance
+    for nm, lp in p1.layers.items():
+        assert lp.spec.cost is not None, nm
+        assert lp.spec.cost.objective == "latency"
+
+
+def test_non_default_objective_stamps_meta():
+    cfg, params, masks = _smallcnn_setup()
+    p = engine_plan.plan_smallcnn(cfg, params, masks, objective="dram",
+                                  deployment="edge-64k")
+    meta = dict(p.meta)
+    assert meta["objective"] == "dram"
+    assert meta["deployment"] == "edge-64k"
+    cs = p.cost_summary()
+    assert cs["objective"] == "dram" and cs["deployment"] == "edge-64k"
+    assert cs["untagged"] == 0
+    assert cs["total_dram_bytes"] > 0 and cs["total_energy_pj"] > 0
+
+
+# ---------------------------------------------------------------------------
+# model-vs-measurement: analytical bytes == execute STATS counters, exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_fc_stream_bytes_match_stats_exactly(impl):
+    """The tag's stored-byte accounting must equal what a traced dispatch
+    actually streams — integer equality, no tolerance."""
+    o, n, m = 64, 128, 32
+    w = jax.random.normal(jax.random.key(0), (o, n))
+    _, mask = balanced_prune_rows(w, 0.5)
+    lp = engine_plan.build_layer_plan("fc0", w, mask=mask, impl=impl,
+                                     m_hint=m)
+    x = jax.random.normal(jax.random.key(1), (m, n))
+    engine_execute.reset_stats()
+    jax.block_until_ready(jax.jit(engine_execute.apply_fc)(x, lp))
+    bs = engine_execute.bytes_stats()["fc0"]
+    tag = lp.spec.cost
+    assert tag is not None
+    assert bs["bytes_weights"] == tag.w_stream_bytes
+    assert bs["bytes_weights"] == pytree_nbytes(lp.weights)
+    assert bs["bytes_act_in"] == tag.act_in_bytes == x.size * x.itemsize
+    assert bs["bytes_act_out"] == tag.act_out_bytes == m * o * x.itemsize
+    assert bs["dispatches"] == 1
+
+
+def test_conv_stream_bytes_match_stats_exactly():
+    co, ci, hk = 16, 8, 3
+    w = jax.random.normal(jax.random.key(0), (co, ci, hk, hk))
+    _, mask = balanced_prune_conv(w, 0.5)
+    lp = engine_plan.build_layer_plan("conv0", w, mask=mask, kind="conv",
+                                     impl="xla", m_hint=64)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, ci))
+    engine_execute.reset_stats()
+    jax.block_until_ready(jax.jit(engine_execute.apply_conv)(x, lp))
+    bs = engine_execute.bytes_stats()["conv0"]
+    assert bs["bytes_weights"] == lp.spec.cost.w_stream_bytes \
+        == pytree_nbytes(lp.weights)
+    assert bs["bytes_act_in"] == x.size * x.itemsize
+    assert bs["dispatches"] == 1
+
+
+def test_stacked_per_dispatch_stream_bytes():
+    """Stacked plans tag the per-dispatch stream: the scanned leading axis
+    divides the stored total exactly (scan slices axis 0)."""
+    L = 4
+    w = jax.random.normal(jax.random.key(0), (L, 64, 96), jnp.float32)
+    lp = engine_plan._plan_stacked("wq", w, sparsity=0.5, impl="xla",
+                                   m_hint=16, cd=jnp.float32)
+    tag = lp.spec.cost
+    assert tag is not None
+    total = pytree_nbytes(lp.weights)
+    assert tag.w_total_bytes == total
+    assert tag.w_stream_bytes * L == total
+
+
+# ---------------------------------------------------------------------------
+# deployment-constrained planning flips modes at LLM dims
+# ---------------------------------------------------------------------------
+
+def test_dram_objective_flips_mode_at_llm_dims():
+    """An olmo-1b-sized projection (2048x2048, 50% sparse) exceeds the
+    ZCU102 weight buffer by ~10x: the latency objective keeps the GEMV
+    ON_CHIP label, the dram objective must re-mode to a streaming
+    dataflow — and never model more traffic than the latency plan."""
+    w = jax.random.normal(jax.random.key(0), (1, 2048, 2048), jnp.bfloat16)
+    lat = engine_plan._plan_stacked("wq", w, sparsity=0.5, impl="xla",
+                                    m_hint=256, cd=jnp.bfloat16)
+    dram = engine_plan._plan_stacked("wq", w, sparsity=0.5, impl="xla",
+                                     m_hint=256, cd=jnp.bfloat16,
+                                     objective="dram")
+    assert lat.spec.mode == "ON_CHIP"
+    assert dram.spec.mode in ("RIF", "RWF")
+    assert dram.spec.cost.dram_bits <= lat.spec.cost.dram_bits
+    # both tags carry the same stored-byte accounting
+    assert dram.spec.cost.w_total_bytes == lat.spec.cost.w_total_bytes \
+        == pytree_nbytes(dram.weights)
+
+
+def test_deployment_objects_and_lookup():
+    assert cost_model.get_deployment(None).name == "zcu102"
+    assert cost_model.get_deployment("edge-4k").weight_buffer_bits \
+        < cost_model.get_deployment("edge-64k").weight_buffer_bits \
+        < ZCU102.weight_buffer_bits
+    with pytest.raises(KeyError):
+        cost_model.get_deployment("gameboy")
+
+
+# ---------------------------------------------------------------------------
+# guard: stale cost tags are structural violations
+# ---------------------------------------------------------------------------
+
+def _fc_plan_with_tag():
+    w = jax.random.normal(jax.random.key(0), (32, 64))
+    _, mask = balanced_prune_rows(w, 0.5)
+    return engine_plan.build_layer_plan("fc0", w, mask=mask, impl="xla",
+                                        m_hint=8)
+
+
+def test_guard_accepts_fresh_tag():
+    lp = _fc_plan_with_tag()
+    assert engine_guard.validate_layer(lp).ok
+
+
+@pytest.mark.parametrize("bad", [
+    {"w_total_bytes": 1},                     # disagrees with the pytree
+    {"mode": "WARP"},                         # unknown dataflow mode
+    {"objective": "vibes"},                   # unknown objective
+    {"energy_pj": float("nan")},              # non-finite figure
+])
+def test_guard_flags_stale_or_bogus_tag(bad):
+    lp = _fc_plan_with_tag()
+    tag = dataclasses.replace(lp.spec.cost, **bad)
+    stale = engine_plan.LayerPlan(
+        spec=dataclasses.replace(lp.spec, cost=tag), weights=lp.weights)
+    report = engine_guard.validate_layer(stale)
+    assert not report.ok
+    assert all(v.check.startswith("cost_") for v in report.violations)
+
+
+def test_guard_demotion_drops_stale_tag():
+    """Demoting to dense re-encodes the weights; the old tag would fail
+    the byte check, so demote_layer must drop it."""
+    lp = _fc_plan_with_tag()
+    demoted = engine_execute.demote_layer(lp, to_impl="dense")
+    assert demoted.spec.impl != lp.spec.impl
+    if pytree_nbytes(demoted.weights) != pytree_nbytes(lp.weights):
+        assert demoted.spec.cost is None
+    assert engine_guard.validate_layer(demoted).ok
+
+
+# ---------------------------------------------------------------------------
+# measured rank agreement (autotune micro-bench vs modeled latency)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_modeled_latency_ranking_agrees_with_measurement():
+    """Pairwise rank concordance between the cost model's latency and the
+    autotune micro-benchmark on size-separated GEMM cells: where the model
+    predicts a >=1.5x gap, the measured ordering must agree on >=70% of
+    pairs.  (Absolute constants are TPU-calibrated; only the ordering is
+    checked on this backend.)"""
+    from functools import partial
+
+    from repro.kernels import autotune, ops
+
+    cells = [(8, 64, 128, 32), (16, 128, 256, 64), (32, 256, 512, 128),
+             (64, 512, 512, 256), (128, 512, 1024, 256),
+             (128, 1024, 1024, 512)]
+    dep = DEPLOYMENTS["tpu-host"]
+    modeled, measured = [], []
+    for m, o, n, k in cells:
+        c = gemm_layer_cost(
+            m=m, n_in=n, n_out=o,
+            w_format_bits=cost_model.flat_format_bits(o, k, n),
+            macs=m * o * k, dep=dep)
+        modeled.append(c["latency_s"])
+        x, vals, idx = autotune._bench_problem(m, o, n, k, jnp.float32)
+        ch = ops.choose_blocks(m, o, n, k, itemsize=4)
+        kb = max_block_count(idx, n, ch.bn)
+        tb = encode_tiled(vals, idx, n, bn=ch.bn, kb=kb)
+        fn = jax.jit(partial(ops.tiled_spmm, tb=tb, block_m=ch.bm,
+                             block_o=ch.bo))
+        measured.append(autotune.bench_time(fn, x, iters=3))
+    agree = total = 0
+    for a in range(len(cells)):
+        for b in range(a + 1, len(cells)):
+            hi, lo = max(modeled[a], modeled[b]), min(modeled[a], modeled[b])
+            if hi / lo < 1.5:
+                continue  # model calls it a toss-up; don't score the pair
+            total += 1
+            if (modeled[a] < modeled[b]) == (measured[a] < measured[b]):
+                agree += 1
+    assert total >= 5, "cells not size-separated enough to score"
+    assert agree / total >= 0.7, f"concordance {agree}/{total}"
+
+
+# ---------------------------------------------------------------------------
+# CostTag hashability (rides in jit aux data)
+# ---------------------------------------------------------------------------
+
+def test_cost_tag_hashable_and_stable():
+    t1 = CostTag(mode="RWF", w_stream_bytes=10, w_total_bytes=10)
+    t2 = CostTag(mode="RWF", w_stream_bytes=10, w_total_bytes=10)
+    assert t1 == t2 and hash(t1) == hash(t2)
+    assert t1 != dataclasses.replace(t1, mode="RIF")

@@ -31,3 +31,17 @@ def test_kernel_bench_smoke_gate(tmp_path):
     for net in ("alexnet", "vgg16", "resnet50"):
         assert report["networks"][net]["pallas_all_ok"]
         assert report["networks"][net]["layers"]
+
+
+def test_kernel_bench_dram_model_section():
+    """The analytical-only dram section (no kernels run): all four paper
+    nets inside the ADC reduction band, adaptive never above fixed."""
+    kb = _load_kernel_bench()
+    dram = kb.bench_dram_model()
+    assert dram["deployment"] == "zcu102" and dram["scope"] == "adc"
+    nets = dram["networks"]
+    assert set(nets) == {"alexnet", "vgg16", "resnet50", "googlenet"}
+    for net, cell in nets.items():
+        assert 1.17 <= cell["reduction"] <= 2.0, (net, cell["reduction"])
+        assert cell["adaptive_dram_bytes"] <= cell["fixed_rif_dram_bytes"]
+        assert cell["adaptive_energy_pj"] > 0

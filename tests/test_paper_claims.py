@@ -1,0 +1,114 @@
+"""Paper-claims golden tests: the cost model reproduces Sense's headline
+DRAM-access numbers (DESIGN.md §14).
+
+The paper's Adaptive Dataflow Configuration (§V-C) claims "up to 1.17x"
+DRAM-access reduction over a fixed dataflow; Fig.22 shows per-network
+reductions between that floor and ~2x.  These tests pin the analytical
+model (`launch.cost_model`) inside that band on the four paper benchmarks
+at Tab.V sparsity on the Tab.IV ZCU102 buffer budget, plus the
+storage-ratio flip behaviour of `core.dataflow.choose_dataflow` that the
+mechanism rests on.  Pure NumPy/arithmetic — no JAX tracing — so this
+file belongs in the CI fast lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.core.dataflow import LayerSpec, choose_dataflow
+from repro.launch import cost_model
+from repro.launch.cost_model import DEPLOYMENTS, adc_reduction, network_cost
+from repro.models.cnn import PAPER_NETWORKS, network_layers
+
+ZCU102 = DEPLOYMENTS["zcu102"]
+
+# Fixed-RIF over adaptive, conv scope, measured on this model (see
+# DESIGN.md §14): alexnet 1.229, vgg16 1.853, resnet50 1.722,
+# googlenet 1.358.  The paper claims >= 1.17x and Fig.22 tops out
+# under ~2x; the band leaves margin on both sides.
+ADC_BAND = (1.17, 2.0)
+
+
+@pytest.mark.parametrize("net", PAPER_NETWORKS)
+def test_adc_dram_reduction_band(net):
+    layers = network_layers(net, "sense")
+    r = adc_reduction(layers, ZCU102, scope="adc")
+    lo, hi = ADC_BAND
+    assert lo <= r <= hi, f"{net}: ADC reduction {r:.3f} outside [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("net", PAPER_NETWORKS)
+def test_adaptive_never_loses(net):
+    """Adaptive picks the per-layer min, so it can never exceed fixed-RIF
+    — on the full network (fc included) as well as the conv-only scope."""
+    layers = network_layers(net, "sense")
+    for scope in ("all", "adc"):
+        a = network_cost(layers, ZCU102, adaptive=True, scope=scope)
+        f = network_cost(layers, ZCU102, adaptive=False, scope=scope)
+        assert a["total_bits"] <= f["total_bits"]
+        # and per layer, the chosen mode is the per_mode minimum
+        for c in a["per_layer"]:
+            assert c["dram_bits"] == min(c["per_mode"].values())
+
+
+@pytest.mark.parametrize("net", PAPER_NETWORKS)
+def test_adaptive_escapes_fixed_rif(net):
+    """The reduction comes from re-moding, so on every paper net the
+    adaptive mode mix must differ from the fixed-RIF baseline — at least
+    one conv layer captures on-chip or goes weight-stationary.  (Which of
+    the two dominates is network-dependent: googlenet's small per-branch
+    weight sets all fit the ZCU102 buffer, so it is pure ON_CHIP.)"""
+    layers = network_layers(net, "sense")
+    modes = network_cost(layers, ZCU102, adaptive=True, scope="adc")["modes"]
+    assert set(modes) != {"RIF"}
+    assert any(m in ("RWF", "ON_CHIP") for m in modes)
+
+
+def test_choose_dataflow_storage_ratio_flip():
+    """§V-C's flip on real paper layers: with no on-chip capture available
+    (1-bit buffer) the storage ratio alone decides.  VGG-16's big-IFM
+    early convs keep weights stationary (RWF); ResNet-50's deep 1x1
+    bottlenecks — small IFM, many output channels — flip to RIF."""
+    cap = 1  # nothing is resident, pure ratio decision
+    early = choose_dataflow(network_layers("vgg16", "sense")[0],
+                            weight_buffer_bits=cap)
+    late = choose_dataflow(
+        next(l for l in network_layers("resnet50", "sense")
+             if l.name == "s2b0_1x1b"), weight_buffer_bits=cap)
+    assert early.mode == "RWF"
+    assert late.mode == "RIF"
+    # the choice is exactly argmin of the two candidate costs
+    assert early.d_mem_bits == min(early.d_mem_rif, early.d_mem_rwf)
+    assert late.d_mem_bits == min(late.d_mem_rif, late.d_mem_rwf)
+
+
+def test_choose_dataflow_on_chip_capture():
+    """When the compressed weight set fits the buffer, weights load once
+    (the paper's Layer-3 case) regardless of the RIF/RWF ratio."""
+    ls = LayerSpec(name="tiny", kind="conv", h_i=14, w_i=14, c_i=32,
+                   c_o=32, h_k=3, w_k=3, stride=1, padding=1,
+                   w_sparsity=0.5, ifm_sparsity=0.45)
+    c = choose_dataflow(ls, weight_buffer_bits=ZCU102.weight_buffer_bits)
+    assert c.mode == "ON_CHIP"
+    assert c.d_mem_bits == c.i_mem + c.w_mem
+
+
+def test_fc_layers_mode_invariant():
+    """GEMV fc layers have no weight-reuse dimension: every mode streams
+    the weights once, so all per-mode entries agree — the reason
+    scope=\"adc\" excludes them from the reduction figure."""
+    fc = LayerSpec(name="fc", kind="fc", c_i=4096, c_o=1000,
+                   w_sparsity=0.8, ifm_sparsity=0.6)
+    c = cost_model.conv_layer_cost(fc, ZCU102)
+    assert len(set(c["per_mode"].values())) == 1
+
+
+def test_reduction_grows_with_tighter_buffers():
+    """Fixed-RIF pays per-chunk weight re-streaming; shrinking the IFM
+    buffer raises the chunk count, so the adaptive advantage must not
+    shrink when buffers get tighter."""
+    layers = network_layers("vgg16", "sense")
+    tight = dataclasses.replace(ZCU102, name="tight",
+                                ifm_buffer_bits=ZCU102.ifm_buffer_bits // 4)
+    assert adc_reduction(layers, tight) >= adc_reduction(layers, ZCU102) - 1e-9

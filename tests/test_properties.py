@@ -373,3 +373,73 @@ def test_pack_columns_roundtrip(o, n, k, seed):
     np.testing.assert_array_equal(fidx, idx)
     np.testing.assert_allclose(np.asarray(fvals), np.asarray(sp.values),
                                atol=0)
+
+
+# ---------------------------------------------------------------------------
+# cost-model invariants (launch.cost_model, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+from repro.launch import cost_model as _cm  # noqa: E402
+
+_dep = st.builds(
+    lambda wb, ib: __import__("dataclasses").replace(
+        _cm.DEPLOYMENTS["zcu102"], weight_buffer_bits=wb,
+        ifm_buffer_bits=ib),
+    st.integers(1024, 10_000_000), st.integers(1024, 1_000_000))
+
+
+@given(st.integers(1, 10**8), st.integers(1, 10**8), st.integers(1, 10**7),
+       st.integers(0, 10**7), _dep)
+def test_mode_dram_bits_positive_and_floored(i, w, o, p, dep):
+    """Every mode's traffic is positive and never below the stream-once
+    floor i + w + o; ON_CHIP, when feasible, achieves that floor."""
+    costs = _cm.mode_dram_bits(i, w, o, p, dep)
+    for v in costs.values():
+        assert v >= i + w + o > 0
+    if "ON_CHIP" in costs:
+        assert costs["ON_CHIP"] == i + w + o
+    assert _cm.pick_mode(costs) in costs
+
+
+@given(st.integers(1, 10**7), st.integers(1, 10**7), st.integers(1, 10**6),
+       st.integers(0, 10**6), st.integers(2, 16), _dep)
+def test_mode_dram_bits_monotone(i, w, o, p, scale, dep):
+    """Scaling any single operand up never reduces any mode's traffic."""
+    base = _cm.mode_dram_bits(i, w, o, p, dep)
+    for grown in (_cm.mode_dram_bits(i * scale, w, o, p, dep),
+                  _cm.mode_dram_bits(i, w * scale, o, p, dep),
+                  _cm.mode_dram_bits(i, w, o * scale, p, dep)):
+        for mode, v in grown.items():
+            if mode in base:
+                assert v >= base[mode]
+
+
+@given(st.integers(1, 10**7), st.integers(1, 10**8), st.integers(1, 10**6),
+       _dep)
+def test_gemv_modes_collapse(i, w, o, dep):
+    """fc GEMV layers stream weights once under any dataflow: all feasible
+    modes cost the same, so mode choice cannot matter."""
+    costs = _cm.mode_dram_bits(i, w, o, 0, dep, gemv=True)
+    assert len(set(costs.values())) == 1
+
+
+@given(st.integers(1, 64), st.integers(2, 512), st.sampled_from([8, 16, 32]),
+       st.sampled_from(["none", "int8", "int4"]), st.integers(0, 10**6))
+def test_tiled_format_bits_match_encoder_random(o, n, bn, quant, seed):
+    """Shape-level format bits == the concrete tile encoder, bit for bit,
+    on random balanced patterns (the hypothesis twin of the grid test in
+    test_cost_model.py)."""
+    k = max(1, min(n - 1, (seed % n)))
+    rng = np.random.default_rng(seed)
+    idx = np.sort(np.argsort(rng.random((o, n)), axis=1)[:, :k],
+                  axis=1).astype(np.int32)
+    vals = jnp.asarray(rng.standard_normal((o, k)), jnp.float32)
+    kb = max_block_count(idx, n, bn)
+    tb = encode_tiled(vals, idx, n, bn=bn, kb=kb)
+    if quant != "none":
+        from repro.kernels.tile_format import quantize_tiled
+        tb = quantize_tiled(tb, quant)
+    from repro.kernels.tile_format import tiled_storage_bits
+    assert _cm.tiled_format_bits(tb.n_out, tb.nb, tb.kb, tb.bn,
+                                 elem_bits=16, quant=quant) \
+        == tiled_storage_bits(tb, elem_bits=16)

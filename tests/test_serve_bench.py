@@ -68,3 +68,21 @@ def test_serve_bench_smoke_gate(tmp_path):
     for side in ("continuous", "static"):
         for k in ("p50", "p99"):
             assert traffic[side]["latency_s"][k] > 0.0
+
+
+@pytest.mark.slow
+def test_serve_bench_dram_cell_gate():
+    """The deployment-constrained dram cell: planning the same smoke model
+    under objective="dram" on a buffer-starved profile must re-mode at
+    least one layer and never model more DRAM traffic than the latency
+    plan; dram_gate_failures must agree with those invariants."""
+    sb = _load_serve_bench()
+    cell = sb.bench_dram(sparsity=0.5)
+    assert sb.dram_gate_failures(cell) == []
+    assert cell["layers_changed"] >= 1
+    assert cell["changed"]  # per-layer (from -> to) provenance present
+    lat = cell["objective_latency"]["total_dram_bytes"]
+    dra = cell["objective_dram"]["total_dram_bytes"]
+    assert 0 < dra <= lat
+    # the derived profile really is buffer-starved vs the board default
+    assert cell["deployment"]["weight_buffer_bits"] > 0
